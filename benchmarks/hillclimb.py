@@ -1,0 +1,135 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Perf-iteration driver (EXPERIMENTS.md §Perf): lower one (arch, shape)
+cell under a named sharding/step variant and report the three roofline
+terms, so hypothesis -> change -> measure cycles take one command.
+
+    PYTHONPATH=src python benchmarks/hillclimb.py --arch gemma-2b \
+        --shape train_4k --variant sp
+
+Variants:
+    baseline      the sweep configuration
+    sp            sequence-parallel residual stream (heads-fallback archs)
+    moe_align     tokens pre-sharded to the EP layout before shard_map
+    grads_bf16    bf16 gradient all-reduce (halves DP collective bytes)
+    no_zero3      replicate params over the data axis (serving: kills the
+                  per-step weight all-gather that ZeRO-3 storage implies)
+    sp+moe_align  combinations via '+'
+"""
+import argparse
+import json
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.dirname(__file__))
+
+import jax  # noqa: E402
+
+from repro.configs import get_config, shape_by_name  # noqa: E402
+from repro.distributed.collectives import compress_grads  # noqa: E402
+from repro.distributed.sharding import Plan  # noqa: E402
+from repro.launch import specs as S  # noqa: E402
+from repro.launch.dryrun import analyze, collective_bytes  # noqa: E402
+from repro.launch.mesh import batch_axes, make_production_mesh  # noqa: E402
+from repro.models.moe import EPSpec  # noqa: E402
+from repro.serving.step import cache_shape, make_decode_step, make_prefill_step  # noqa: E402
+from repro.training.optimizer import OptConfig  # noqa: E402
+from repro.training.step import StepOptions, make_train_step, train_state_shape  # noqa: E402
+from roofline import analyze_record  # noqa: E402
+
+
+def lower_variant(arch: str, shape_name: str, variant: str, multi_pod=False):
+    import dataclasses
+    cfg = get_config(arch)
+    shape = shape_by_name(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    opts = set(variant.split("+"))
+    if "pad_heads" in opts:
+        cfg = dataclasses.replace(cfg, pad_heads=-(-cfg.num_heads // 16) * 16)
+    sp = True if "sp" in opts else (False if "no_sp" in opts else None)
+    plan = Plan(mesh, cfg,
+                seq_parallel=sp,
+                moe_token_align="moe_align" in opts,
+                zero3="no_zero3" not in opts)
+    ep = EPSpec(mesh, batch_axes(mesh)) if cfg.moe is not None else None
+    grad_transform = compress_grads("bf16") if "grads_bf16" in opts else None
+    step_options = StepOptions(
+        remat_policy="dots" if "remat_dots" in opts else None)
+
+    with mesh:
+        if shape.kind == "train":
+            oc = OptConfig(state_dtype=cfg.optimizer_state_dtype)
+            step = make_train_step(cfg, oc, constrain=plan.constrain, ep=ep,
+                                   grad_transform=grad_transform,
+                                   options=step_options)
+            state_shape = train_state_shape(cfg, oc)
+            state_sh = {
+                "params": plan.param_shardings(state_shape["params"]),
+                "opt": {
+                    "mu": plan.param_shardings(state_shape["opt"]["mu"]),
+                    "nu": plan.param_shardings(state_shape["opt"]["nu"]),
+                    "step": jax.sharding.NamedSharding(
+                        mesh, jax.sharding.PartitionSpec()),
+                },
+            }
+            batch_shape = S.train_batch_specs(cfg, shape)
+            fn = jax.jit(step, in_shardings=(state_sh,
+                                             plan.batch_shardings(batch_shape)),
+                         donate_argnums=(0,))
+            lowered = fn.lower(state_shape, batch_shape)
+        elif shape.kind == "prefill":
+            from repro.models import init_params
+            params_shape = jax.eval_shape(
+                lambda: init_params(cfg, jax.random.key(0)))
+            step = make_prefill_step(cfg, max_len=shape.seq_len,
+                                     constrain=plan.constrain, ep=ep)
+            batch_shape = S.prefill_batch_specs(cfg, shape)
+            lowered = jax.jit(step, in_shardings=(
+                plan.param_shardings(params_shape),
+                plan.batch_shardings(batch_shape))
+            ).lower(params_shape, batch_shape)
+        else:
+            from repro.models import init_params
+            params_shape = jax.eval_shape(
+                lambda: init_params(cfg, jax.random.key(0)))
+            step = make_decode_step(cfg, constrain=plan.constrain, ep=ep)
+            cache = cache_shape(cfg, shape.global_batch, shape.seq_len,
+                                enc_len=S.enc_len_for(cfg, shape))
+            tok = S.decode_token_specs(cfg, shape)
+            lowered = jax.jit(step, in_shardings=(
+                plan.param_shardings(params_shape),
+                plan.cache_shardings(cache),
+                plan.batch_shardings(tok)), donate_argnums=(1,)
+            ).lower(params_shape, cache, tok)
+        rec = {"arch": arch, "shape": shape_name,
+               "mesh": "2x16x16" if multi_pod else "16x16", "ok": True}
+        rec.update(analyze(lowered))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+    rec = lower_variant(args.arch, args.shape, args.variant, args.multi_pod)
+    roof = analyze_record(rec)
+    print(f"== {args.arch} x {args.shape} [{args.variant}] ==")
+    print(f"compile_s={rec['compile_s']} n_collectives={rec['n_collectives']}"
+          f" peak={rec['peak_bytes_per_device']/2**30:.1f}GiB(cpu-f32)")
+    for k in ("t_compute_s", "t_memory_s", "t_collective_s"):
+        print(f"{k}: {roof[k]:.5f}")
+    print(f"dominant={roof['dominant']} useful={roof['useful_ratio']:.2f} "
+          f"roofline_fraction={roof['roofline_fraction']*100:.1f}%")
+    if args.json:
+        with open(args.json, "a") as f:
+            f.write(json.dumps({"variant": args.variant, **rec,
+                                "roof": roof}) + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,146 @@
+"""Roofline analysis from the dry-run's compiled artifacts (EXPERIMENTS.md
+§Roofline).
+
+Terms (per chip; cost_analysis() is per-device on this jax build — verified
+by probe, DESIGN.md §6):
+
+    compute    = HLO_FLOPs_visible + scan-hidden FLOPs   / 197e12  (bf16 peak)
+    memory     = HLO_bytes * bf16_adjust                 / 819e9   (HBM bw)
+    collective = sum ring_factor(op) * op_bytes          / 50e9    (ICI link)
+
+Corrections, both documented in EXPERIMENTS.md:
+- scan-hidden FLOPs: cost_analysis counts a lax.scan body ONCE; the only
+  scanned compute in the models is blockwise prefill attention (S=32k), so
+  the analytic attention FLOPs x (nk-1)/nk are added back.
+- bf16_adjust = 0.5 for bf16-dominated programs: the CPU backend upcasts
+  bf16->f32, doubling every byte count relative to the TPU target.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from typing import Dict, Optional
+
+from repro.configs import get_config, shape_by_name
+from repro.configs.base import ModelConfig, ShapeConfig
+
+PEAK_FLOPS = 197e12          # bf16 / chip (TPU v5e)
+HBM_BW = 819e9               # bytes/s / chip
+LINK_BW = 50e9               # bytes/s / ICI link
+BF16_ADJUST = 0.5            # CPU-HLO f32 upcast correction for bytes
+
+RING = {                     # per-device ring-cost factors (n=16 axis)
+    "all-reduce": 2 * 15 / 16,
+    "all-gather": 15 / 16,
+    "reduce-scatter": 15 / 16,
+    "all-to-all": 15 / 16,
+    "collective-permute": 1.0,
+}
+
+KV_CHUNK = 1024
+BLOCKWISE_THRESHOLD = 8192
+
+
+def attention_flops_per_device(cfg: ModelConfig, shape: ShapeConfig,
+                               chips: int) -> float:
+    """Analytic causal-attention FLOPs for global-attn layers (QK^T + AV)."""
+    if cfg.num_heads == 0:
+        return 0.0
+    b, s = shape.global_batch, shape.seq_len
+    hd = cfg.resolved_head_dim
+    n_global = sum(1 for i in range(cfg.num_layers)
+                   if cfg.layer_kind(i) == "attn")
+    if cfg.is_encoder_decoder:
+        n_global += cfg.num_encoder_layers
+    flops = n_global * 2 * 2 * b * cfg.num_heads * (s * s / 2) * hd
+    return flops / chips
+
+
+def hidden_flops(cfg: ModelConfig, shape: ShapeConfig, chips: int,
+                 kind: str) -> float:
+    """FLOPs invisible to cost_analysis (scan bodies counted once)."""
+    if shape.kind != "prefill" or shape.seq_len <= BLOCKWISE_THRESHOLD:
+        return 0.0
+    nk = shape.seq_len // KV_CHUNK
+    att = attention_flops_per_device(cfg, shape, chips)
+    # forward-only prefill; scan shows 1/nk of the attention math
+    return att * (nk - 1) / nk
+
+
+def model_flops_per_device(cfg: ModelConfig, shape: ShapeConfig,
+                           chips: int) -> float:
+    """6*N_active*D (train) or 2*N_active*tokens (inference)."""
+    n_active = cfg.param_counts()["active"]
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6 * n_active * tokens / chips
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2 * n_active * tokens / chips
+    tokens = shape.global_batch          # one new token per sequence
+    return 2 * n_active * tokens / chips
+
+
+def analyze_record(rec: Dict) -> Optional[Dict]:
+    if not rec.get("ok"):
+        return None
+    cfg = get_config(rec["arch"])
+    shape = shape_by_name(rec["shape"])
+    chips = 512 if rec.get("mesh", "").startswith("2x") else 256
+    visible = rec["flops_per_device"]
+    hidden = hidden_flops(cfg, shape, chips, shape.kind)
+    flops = visible + hidden
+    t_compute = flops / PEAK_FLOPS
+    mem_bytes = rec["bytes_per_device"] * BF16_ADJUST
+    t_memory = mem_bytes / HBM_BW
+    coll = rec.get("collective_bytes", {})
+    # BF16_ADJUST applies to collectives too: the CPU backend upcasts bf16
+    # tensors to f32, so parsed operand sizes are 2x the TPU transfer size.
+    coll_bytes = sum(RING.get(op, 1.0) * b for op, b in coll.items()) \
+        * BF16_ADJUST
+    t_coll = coll_bytes / LINK_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    mf = model_flops_per_device(cfg, shape, chips)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "hlo_flops": flops, "hidden_flops": hidden,
+        "model_flops": mf,
+        "useful_ratio": mf / flops if flops else 0.0,
+        "roofline_fraction": t_compute / bound if bound else 0.0,
+        "peak_gib": rec.get("peak_bytes_per_device", 0) / 2**30,
+    }
+
+
+def table(results_path: str = "dryrun_results.json",
+          mesh_filter: str = "16x16") -> list:
+    with open(results_path) as f:
+        rows = json.load(f)
+    out = []
+    for rec in rows:
+        if mesh_filter and rec.get("mesh") != mesh_filter:
+            continue
+        r = analyze_record(rec)
+        if r:
+            out.append(r)
+    return out
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "dryrun_results.json"
+    rows = table(path)
+    hdr = (f"{'arch':26s} {'shape':12s} {'compute_s':>10s} {'memory_s':>10s} "
+           f"{'coll_s':>10s} {'dom':>10s} {'useful':>7s} {'roofl%':>7s}")
+    print(hdr)
+    for r in rows:
+        print(f"{r['arch']:26s} {r['shape']:12s} {r['t_compute_s']:10.4f} "
+              f"{r['t_memory_s']:10.4f} {r['t_collective_s']:10.4f} "
+              f"{r['dominant']:>10s} {r['useful_ratio']:7.2f} "
+              f"{100*r['roofline_fraction']:6.1f}%")
+
+
+if __name__ == "__main__":
+    main()

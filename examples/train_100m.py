@@ -1,0 +1,88 @@
+"""End-to-end training driver: a ~100M-parameter gemma-family model trained
+for a few hundred steps on the synthetic pipeline with checkpoint/resume and
+Raptor redundant-DP fault tolerance (a simulated pod failure mid-run).
+
+CPU note: full 100M x hundreds of steps takes ~an hour on this 1-core
+container; --fast trains a 25M twin for 150 steps (same code path).  On a
+TPU mesh the same script runs the full config unchanged.
+
+    PYTHONPATH=src python examples/train_100m.py --fast
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import io as ckpt_io
+from repro.configs import get_config
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.data.synthetic import make_batch
+from repro.training.optimizer import OptConfig
+from repro.training.raptor_dp import signals_to_weights
+from repro.training.step import (StepOptions, init_train_state,
+                                 make_train_step)
+
+
+def model_100m(fast: bool) -> ModelConfig:
+    base = get_config("gemma-2b")
+    if fast:
+        return dataclasses.replace(
+            base, name="gemma-25m", num_layers=4, d_model=320, num_heads=4,
+            num_kv_heads=1, head_dim=64, d_ff=1280, vocab_size=32000,
+            window_size=256, dtype="float32")
+    return dataclasses.replace(
+        base, name="gemma-100m", num_layers=8, d_model=640, num_heads=8,
+        num_kv_heads=1, head_dim=64, d_ff=2560, vocab_size=32000,
+        window_size=256, dtype="float32")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--steps", type=int, default=150)
+    ap.add_argument("--ckpt", default="/tmp/repro_100m_ckpt")
+    args = ap.parse_args(argv)
+
+    cfg = model_100m(args.fast)
+    n_params = cfg.param_counts()["total"]
+    print(f"{cfg.name}: ~{n_params/1e6:.0f}M params, {args.steps} steps")
+    shape = ShapeConfig("train", 128, 4, "train")
+    oc = OptConfig(lr=1e-3, warmup_steps=20, total_steps=args.steps,
+                   weight_decay=0.01)
+    step = jax.jit(make_train_step(cfg, oc, options=StepOptions(remat=False)))
+    state = init_train_state(cfg, oc, jax.random.PRNGKey(0))
+
+    start = 0
+    try:
+        state, start = ckpt_io.restore(args.ckpt, state)
+        start += 1
+        print(f"resumed at step {start}")
+    except FileNotFoundError:
+        pass
+
+    t0, tokens = time.time(), 0
+    for i in range(start, args.steps):
+        batch = {k: jnp.asarray(v)
+                 for k, v in make_batch(cfg, shape, i).items()}
+        health = np.ones(2)
+        if i == args.steps // 2:
+            health[1] = 0.0      # pod loss mid-run; flight degrades, no stop
+        batch["loss_weight"] = jnp.asarray(
+            signals_to_weights(shape.global_batch, 2, health=health))
+        state, m = step(state, batch)
+        tokens += shape.global_batch * shape.seq_len
+        if i % 25 == 0 or i == args.steps - 1:
+            dt = time.time() - t0
+            print(f"step {i}: loss={float(m['loss']):.3f} "
+                  f"({tokens/max(dt,1e-9):.0f} tok/s)")
+        if i % 50 == 0:
+            ckpt_io.save(args.ckpt, i, state)
+    ckpt_io.save(args.ckpt, args.steps - 1, state)
+    print("done; checkpoint committed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,137 @@
+"""Order-statistics theory used by the paper (§4.2.1 equation, Figure 8).
+
+For i.i.d. exponential task times Z_i with mean 1:
+  E[min of n]  = 1/n
+  E[max of n]  = H_n (harmonic number)
+  paper's prediction for the 2-task / flight-2 SSH workload:
+      E[T_Raptor] / E[T_OpenWhisk] = 2 E[min(Z1,Z2)] / E[max(Z1,Z2)] = 2/3.
+
+Failure model (Figure 8): task failure probability p, N parallel tasks:
+  fork-join job failure      = 1 - (1-p)^N      (all must succeed)
+  Raptor flight job failure  = p^N              (any one suffices)
+"""
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import numpy as np
+
+
+def harmonic(n: int) -> float:
+    return sum(1.0 / i for i in range(1, n + 1))
+
+
+def e_min_exp(n: int, mean: float = 1.0) -> float:
+    return mean / n
+
+
+def e_max_exp(n: int, mean: float = 1.0) -> float:
+    return mean * harmonic(n)
+
+
+def raptor_speedup_prediction(num_tasks: int, flight: int) -> float:
+    """E[T_Raptor]/E[T_baseline] for `num_tasks` independent exp(1) tasks.
+
+    Raptor races the whole flight task-by-task (each task completes at the
+    min over `flight` executors, tasks in series); the baseline fork-join
+    waits for the max over the parallel tasks.
+    """
+    t_raptor = num_tasks * e_min_exp(flight)
+    t_base = e_max_exp(num_tasks)
+    return t_raptor / t_base
+
+
+def forkjoin_failure(p: float, n: int) -> float:
+    return 1.0 - (1.0 - p) ** n
+
+
+def raptor_failure(p: float, n: int) -> float:
+    """The paper's Figure 8 expression: p^N (per-task replication bound)."""
+    return p ** n
+
+
+def raptor_failure_exact(p: float, n_tasks: int, flight: int = None) -> float:
+    """Exact job failure for an N-task manifest on a flight of size F with
+    error-broadcast semantics (§3.3.4): a task is lost only if all F
+    attempts error; the job fails if any task is lost.  The paper's p^N is
+    the single-task term; the sim matches this exact form (see
+    tests/test_sim_repro.py)."""
+    f = flight if flight is not None else n_tasks
+    return 1.0 - (1.0 - p ** f) ** n_tasks
+
+
+def response_ratio_paper() -> float:
+    """The paper's headline number: 2*E[min]/E[max] = 1/1.5 ~ 0.67."""
+    return raptor_speedup_prediction(num_tasks=2, flight=2)
+
+
+# --------------------------------------------------------------------------
+# empirical helpers
+# --------------------------------------------------------------------------
+
+def summarize(samples: Sequence[float]) -> dict:
+    a = np.asarray(samples, dtype=np.float64)
+    return {
+        "mean": float(a.mean()),
+        "median": float(np.median(a)),
+        "p90": float(np.percentile(a, 90)),
+        "p99": float(np.percentile(a, 99)),
+        "scv": float(a.var() / (a.mean() ** 2 + 1e-12)),
+        "n": int(a.size),
+    }
+
+
+def mc_flight_time(num_tasks: int, flight: int, n_samples: int = 200_000,
+                   rotated: bool = True, seed: int = 0) -> dict:
+    """Monte-Carlo of the flight completion time under exp(1) tasks.
+
+    rotated=True models the paper's cyclic-shift sequences with state
+    sharing: the flight finishes when the union of per-executor progress
+    covers every task (each executor skips tasks already broadcast).
+    rotated=False models pure task-by-task racing: sum of min-order stats.
+    """
+    rng = np.random.default_rng(seed)
+    if not rotated:
+        t = rng.exponential(size=(n_samples, num_tasks, flight)).min(axis=2).sum(axis=1)
+        return summarize(t)
+    # event-driven per sample with true preemption: when a task first
+    # completes anywhere, members currently running it are preempted at
+    # that instant and immediately start their next pending task.
+    times = np.empty(n_samples)
+    seqs = [list(np.roll(np.arange(num_tasks), -e)) for e in range(flight)]
+    z = rng.exponential(size=(n_samples, flight, 2 * num_tasks + 2))
+    for s in range(n_samples):
+        completed: dict = {}
+        draw_i = [0] * flight
+        cur = [None] * flight          # (task, finish_time) or None (idle)
+        ptr = [0] * flight
+
+        def start_next(e, now):
+            while ptr[e] < num_tasks and seqs[e][ptr[e]] in completed:
+                ptr[e] += 1
+            if ptr[e] >= num_tasks:
+                cur[e] = None
+                return
+            t_ = seqs[e][ptr[e]]
+            cur[e] = (t_, now + z[s, e, draw_i[e]])
+            draw_i[e] = min(draw_i[e] + 1, z.shape[2] - 1)
+            ptr[e] += 1
+
+        for e in range(flight):
+            start_next(e, 0.0)
+        while len(completed) < num_tasks:
+            running = [(c[1], e) for e, c in enumerate(cur) if c is not None]
+            if not running:
+                break
+            fin, e = min(running)
+            task = cur[e][0]
+            if task not in completed:
+                completed[task] = fin
+                # preempt peers running this task
+                for pe, c in enumerate(cur):
+                    if pe != e and c is not None and c[0] == task:
+                        start_next(pe, fin)
+            start_next(e, fin)
+        times[s] = max(completed.values()) if completed else 0.0
+    return summarize(times)

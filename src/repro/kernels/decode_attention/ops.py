@@ -1,0 +1,21 @@
+"""Jitted wrapper for decode attention."""
+from functools import partial
+
+import jax
+
+from repro.kernels.decode_attention.kernel import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+@partial(jax.jit, static_argnames=("scale", "logit_cap", "block_k", "interpret"))
+def gqa_decode(q, k, v, kv_pos, *, scale=None, logit_cap=0.0, block_k=512,
+               interpret=False):
+    return decode_attention(q, k, v, kv_pos, scale=scale,
+                            logit_cap=logit_cap, block_k=block_k,
+                            interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("scale", "logit_cap"))
+def gqa_decode_reference(q, k, v, kv_pos, *, scale=None, logit_cap=0.0):
+    return decode_attention_ref(q, k, v, kv_pos, scale=scale,
+                                logit_cap=logit_cap)

@@ -1,0 +1,27 @@
+"""Oracle for single-token GQA decode attention over a (possibly ring)
+KV cache.  q: [B, Hq, D]; k, v: [B, Sk, Hkv, D]; kv_pos: [Sk] int32 with
+-1 marking invalid slots (matches repro.models.transformer ring semantics).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.3819763e38
+
+
+def decode_attention_ref(q, k, v, kv_pos, *, scale: float | None = None,
+                         logit_cap: float = 0.0):
+    b, hq, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    rep = hq // hkv
+    scale = d ** -0.5 if scale is None else scale
+    kr = jnp.repeat(k, rep, axis=2)              # [B, Sk, Hq, D]
+    vr = jnp.repeat(v, rep, axis=2)
+    s = jnp.einsum("bhd,bkhd->bhk", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) * scale
+    if logit_cap:
+        s = jnp.tanh(s / logit_cap) * logit_cap
+    s = jnp.where((kv_pos >= 0)[None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhk,bkhd->bhd", p, vr.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,25 @@
+"""Jitted public wrapper for the flash-attention kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "logit_cap", "scale",
+                                   "block_q", "block_k", "interpret"))
+def mha(q, k, v, *, causal=True, window=0, logit_cap=0.0, scale=None,
+        block_q=128, block_k=128, interpret=False):
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           logit_cap=logit_cap, scale=scale,
+                           block_q=block_q, block_k=block_k,
+                           interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "logit_cap", "scale"))
+def mha_reference(q, k, v, *, causal=True, window=0, logit_cap=0.0, scale=None):
+    return attention_ref(q, k, v, causal=causal, window=window,
+                         logit_cap=logit_cap, scale=scale)

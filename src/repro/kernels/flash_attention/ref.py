@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for flash attention (causal, sliding-window, softcap,
+GQA).  Layout: q [B, Hq, Sq, D]; k, v [B, Hkv, Sk, D]."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.3819763e38
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                  logit_cap: float = 0.0, scale: float | None = None):
+    b, hq, sq, d = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    scale = d ** -0.5 if scale is None else scale
+    rep = hq // hkv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if logit_cap:
+        s = jnp.tanh(s / logit_cap) * logit_cap
+    qpos = jnp.arange(sq)[:, None] + (sk - sq)   # align ends (decode-style)
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)

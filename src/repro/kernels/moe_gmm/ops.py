@@ -1,0 +1,16 @@
+"""Jitted wrapper for the expert-batched GEMM."""
+from functools import partial
+
+import jax
+
+from repro.kernels.moe_gmm.kernel import expert_matmul
+from repro.kernels.moe_gmm.ref import expert_matmul_ref
+
+
+@partial(jax.jit, static_argnames=("block_c", "block_f", "block_d", "interpret"))
+def gmm(buf, w, *, block_c=128, block_f=128, block_d=256, interpret=False):
+    return expert_matmul(buf, w, block_c=block_c, block_f=block_f,
+                         block_d=block_d, interpret=interpret)
+
+
+gmm_reference = jax.jit(expert_matmul_ref)

@@ -1,0 +1,8 @@
+"""Oracle for the capacity-batched expert matmul (MoE grouped GEMM)."""
+import jax.numpy as jnp
+
+
+def expert_matmul_ref(buf, w):
+    """buf: [E, C, D]; w: [E, D, F] -> [E, C, F] (f32 accumulation)."""
+    return jnp.einsum("ecd,edf->ecf", buf.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(buf.dtype)

@@ -1,0 +1,17 @@
+"""Jitted wrapper for the SSD chunked-scan kernel."""
+from functools import partial
+
+import jax
+
+from repro.kernels.ssd_scan.kernel import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_ref
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(x, dt, A, B, C, *, chunk=256, interpret=False):
+    return ssd_scan(x, dt, A, B, C, chunk=chunk, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("chunk",))
+def ssd_reference(x, dt, A, B, C, *, chunk=256):
+    return ssd_ref(x, dt, A, B, C, chunk=chunk)

@@ -1,0 +1,7 @@
+"""Oracle for the chunked SSD scan kernel: delegates to the (already
+validated) pure-jnp implementation in repro.models.mamba2."""
+from repro.models.mamba2 import ssd_chunked  # noqa: F401
+
+
+def ssd_ref(x, dt, A, B, C, *, chunk: int):
+    return ssd_chunked(x, dt, A, B, C, chunk=chunk)

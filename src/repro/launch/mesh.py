@@ -1,0 +1,44 @@
+"""Production mesh builders.
+
+Functions, not module-level constants: importing this module never touches
+jax device state.  The single-pod mesh is (data=16, model=16) = 256 chips;
+the multi-pod mesh adds a leading pod axis: (pod=2, data=16, model=16) = 512.
+
+The ``pod`` axis doubles as the Raptor *flight* axis: a serving invocation
+flown at concurrency 2 runs one member per pod (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (CPU tests / examples)."""
+    n = len(jax.devices())
+    data = min(data, n)
+    model = max(1, min(model, n // data))
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def batch_axes(mesh) -> tuple:
+    """Mesh axes that shard the batch dimension."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def tp_size(mesh) -> int:
+    return mesh.shape.get("model", 1)
+
+
+def dp_size(mesh) -> int:
+    out = 1
+    for a in batch_axes(mesh):
+        out *= mesh.shape[a]
+    return out

@@ -1,0 +1,57 @@
+"""ShapeDtypeStruct stand-ins for every model input of every (arch x shape)
+cell — the same pattern the dry-run, roofline and benchmarks all read from.
+No device allocation happens here."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+ENC_RATIO = 4  # audio frames per decoder token ratio for enc-dec shapes
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    batch: Dict[str, Any] = {"labels": sds((b, s), "int32")}
+    if cfg.embedding_inputs:
+        batch["embeddings"] = sds((b, s, cfg.d_model), cfg.dtype)
+    else:
+        batch["tokens"] = sds((b, s), "int32")
+    if cfg.mrope:
+        batch["positions"] = sds((3, b, s), "int32")
+    if cfg.is_encoder_decoder:
+        batch["enc_emb"] = sds((b, s // ENC_RATIO, cfg.d_model), cfg.dtype)
+    return batch
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    batch: Dict[str, Any] = {}
+    if cfg.embedding_inputs:
+        batch["embeddings"] = sds((b, s, cfg.d_model), cfg.dtype)
+    else:
+        batch["tokens"] = sds((b, s), "int32")
+    if cfg.mrope:
+        batch["positions"] = sds((3, b, s), "int32")
+    if cfg.is_encoder_decoder:
+        batch["enc_emb"] = sds((b, s // ENC_RATIO, cfg.d_model), cfg.dtype)
+    return batch
+
+
+def decode_token_specs(cfg: ModelConfig, shape: ShapeConfig):
+    b = shape.global_batch
+    if cfg.embedding_inputs and not cfg.is_encoder_decoder:
+        # generated tokens re-enter through the tied embedding table
+        return sds((b, 1), "int32")
+    return sds((b, 1), "int32")
+
+
+def enc_len_for(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    return shape.seq_len // ENC_RATIO if cfg.is_encoder_decoder else 0

@@ -1,0 +1,565 @@
+"""Unified LM covering all assigned families.
+
+One parameter pytree + three pure entry points per architecture:
+
+- ``loss_fn(params, batch)``             (train_4k)
+- ``prefill(params, inputs)``            (prefill_32k) -> (last_logits, cache)
+- ``decode_step(params, cache, inputs)`` (decode_32k / long_500k)
+
+Families: dense / moe (interleaved or every-layer) / ssm (mamba2) /
+hybrid (mamba2 + one shared attention block) / vlm & audio backbones
+(embedding inputs) / encoder-decoder (seamless).
+
+``constrain(tensor, role)`` is an injection point for sharding constraints —
+identity by default so smoke tests run un-meshed on CPU.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import mamba2 as m2
+from repro.models.layers import (
+    apply_mrope,
+    apply_rope,
+    attention_blockwise,
+    attention_full,
+    attention_sliding_blocked,
+    mlp_block,
+    rms_norm,
+    softcap,
+)
+from repro.models.moe import init_moe_params, moe_block
+
+Constrain = Callable[[jnp.ndarray, str], jnp.ndarray]
+_ID: Constrain = lambda t, role: t
+
+BLOCKWISE_THRESHOLD = 8192   # prefill longer than this uses flash-style scan
+KV_CHUNK = 1024
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def _init_attn(key, cfg: ModelConfig, dtype):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    hq, hkv = cfg.num_heads, cfg.num_kv_heads
+    ks = jax.random.split(key, 4)
+    s = 0.02
+    return {
+        "wq": jax.random.normal(ks[0], (d, hq * hd), dtype) * s,
+        "wk": jax.random.normal(ks[1], (d, hkv * hd), dtype) * s,
+        "wv": jax.random.normal(ks[2], (d, hkv * hd), dtype) * s,
+        "wo": jax.random.normal(ks[3], (hq * hd, d), dtype) * s,
+    }
+
+
+def _init_mlp(key, d, ff, dtype):
+    ks = jax.random.split(key, 3)
+    s = 0.02
+    return {
+        "w_gate": jax.random.normal(ks[0], (d, ff), dtype) * s,
+        "w_up": jax.random.normal(ks[1], (d, ff), dtype) * s,
+        "w_down": jax.random.normal(ks[2], (ff, d), dtype) * s,
+    }
+
+
+def _init_block(key, cfg: ModelConfig, i: int, dtype):
+    kind = cfg.layer_kind(i)
+    ks = jax.random.split(key, 3)
+    p: Dict[str, Any] = {"ln1": jnp.zeros((cfg.d_model,), jnp.float32)}
+    if kind == "ssm":
+        p["ssm"] = m2.init_mamba2_params(ks[0], cfg.d_model, cfg.ssm, dtype)
+        return p
+    p["attn"] = _init_attn(ks[0], cfg, dtype)
+    p["ln2"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    if cfg.is_moe_layer(i):
+        p["moe"] = init_moe_params(ks[1], cfg.d_model, cfg.moe, dtype)
+    else:
+        p["mlp"] = _init_mlp(ks[1], cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def _init_enc_block(key, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), jnp.float32),
+        "attn": _init_attn(ks[0], cfg, dtype),
+        "ln2": jnp.zeros((cfg.d_model,), jnp.float32),
+        "mlp": _init_mlp(ks[1], cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def _init_dec_block(key, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 3)
+    p = _init_enc_block(ks[0], cfg, dtype)
+    p["ln_cross"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    p["cross"] = _init_attn(ks[1], cfg, dtype)
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    dtype = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, cfg.num_layers + 8)
+    params: Dict[str, Any] = {
+        "embed": jax.random.normal(keys[0], (cfg.vocab_size, cfg.d_model), dtype) * 0.02,
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = jax.random.normal(
+            keys[1], (cfg.d_model, cfg.vocab_size), dtype) * 0.02
+    if cfg.is_encoder_decoder:
+        ek = jax.random.split(keys[2], cfg.num_encoder_layers)
+        params["encoder"] = {
+            "layers": [_init_enc_block(k, cfg, dtype) for k in ek],
+            "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+        }
+        params["layers"] = [
+            _init_dec_block(keys[3 + i], cfg, dtype) for i in range(cfg.num_layers)]
+        return params
+    params["layers"] = [
+        _init_block(keys[3 + i], cfg, i, dtype) for i in range(cfg.num_layers)]
+    if cfg.family == "hybrid" and cfg.hybrid_attn_every:
+        params["shared_block"] = _init_enc_block(keys[2], cfg, dtype)
+    return params
+
+
+# --------------------------------------------------------------------------
+# attention block (train / prefill / decode) with cache handling
+# --------------------------------------------------------------------------
+
+def _attn_scale(cfg: ModelConfig) -> float:
+    base = cfg.query_pre_attn_scalar or cfg.resolved_head_dim
+    return float(base) ** -0.5
+
+
+def _repeat_kv_full(k, hq: int):
+    b, s, hkv, hd = k.shape
+    if hkv == hq:
+        return k
+    return jnp.broadcast_to(k[:, :, :, None],
+                            (b, s, hkv, hq // hkv, hd)).reshape(b, s, hq, hd)
+
+
+def _pad_heads(t, target: int):
+    pad = target - t.shape[2]
+    return jnp.pad(t, ((0, 0), (0, 0), (0, pad), (0, 0))) if pad else t
+
+
+def _project_qkv(x, p, cfg: ModelConfig, positions, constrain: Constrain):
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = (x @ p["wq"]).reshape(b, s, cfg.num_heads, hd)
+    k = (x @ p["wk"]).reshape(b, s, cfg.num_kv_heads, hd)
+    v = (x @ p["wv"]).reshape(b, s, cfg.num_kv_heads, hd)
+    q = constrain(q, "act_heads")
+    k = constrain(k, "act_kv_heads")
+    v = constrain(v, "act_kv_heads")
+    if positions is not None:
+        if cfg.mrope:
+            q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+            k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+        else:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention_block(x, p, cfg: ModelConfig, *, kind: str, mode: str,
+                    positions, cache=None, constrain: Constrain = _ID,
+                    cross_kv=None):
+    """Full attention sublayer incl. cache read/write.  x: [B,S,D]."""
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    scale = _attn_scale(cfg)
+    cap = cfg.attn_logit_softcap
+    local = kind == "local_attn"
+    window = cfg.window_size if local else 0
+
+    if cross_kv is not None:                                   # enc-dec cross attention
+        q = (x @ p["wq"]).reshape(b, s, cfg.num_heads, hd)
+        k, v = cross_kv
+        out = attention_full(q, k, v, causal=False, scale=scale, logit_cap=cap)
+        return out.reshape(b, s, -1) @ p["wo"], cache
+
+    q, k, v = _project_qkv(x, p, cfg, positions, constrain)
+
+    if mode == "decode":
+        # cache: {"k": [B, C, hkv, hd], "v": ..., } write at index (ring for local)
+        idx = cache["index"]                                   # scalar int32
+        cache_len = cache["k"].shape[1]
+        slot = (idx % cache_len) if local else jnp.minimum(idx, cache_len - 1)
+        kc = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+        vc = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+        if local:
+            # ring cache: slot s holds absolute position idx - ((idx - s) mod C)
+            slots = jnp.arange(cache_len)
+            kv_pos = idx - ((idx - slots) % cache_len)
+            valid = (kv_pos >= 0) & (kv_pos > idx - window) & (kv_pos <= idx)
+            scores_kpos = jnp.where(valid, kv_pos, -1)
+            out = _decode_attention(q, kc, vc, scores_kpos, idx, scale, cap)
+        else:
+            kv_pos = jnp.arange(cache_len)
+            scores_kpos = jnp.where(kv_pos <= idx, kv_pos, -1)
+            out = _decode_attention(q, kc, vc, scores_kpos, idx, scale, cap)
+        new_cache = dict(cache, k=kc, v=vc)
+        return out.reshape(b, s, -1) @ p["wo"], new_cache
+
+    # train / prefill over the full sequence
+    hq = cfg.num_heads
+    padded = cfg.pad_heads and cfg.pad_heads > hq
+    if padded:
+        # pre-repeat KV to full query heads, zero-pad the head dim to a
+        # model-axis multiple, and shard heads — padded heads only ever
+        # interact with padded heads, and their outputs are sliced away.
+        k = _pad_heads(_repeat_kv_full(k, hq), cfg.pad_heads)
+        v = _pad_heads(_repeat_kv_full(v, hq), cfg.pad_heads)
+        q = _pad_heads(q, cfg.pad_heads)
+        q = constrain(q, "act_heads")
+        k = constrain(k, "act_heads")
+        v = constrain(v, "act_heads")
+    if local and s > window:
+        out = attention_sliding_blocked(q, k, v, window=window,
+                                        logit_cap=cap, scale=scale)
+    elif s > BLOCKWISE_THRESHOLD:
+        out = attention_blockwise(q, k, v, causal=True, logit_cap=cap,
+                                  scale=scale, chunk=KV_CHUNK)
+    else:
+        out = attention_full(q, k, v, causal=True, window=window,
+                             logit_cap=cap, scale=scale)
+    if padded:
+        out = out[:, :, :hq]
+    out = constrain(out, "act_heads")
+    new_cache = cache
+    if mode == "prefill":
+        cache_len = cache["k"].shape[1]
+        if local:
+            keep = min(window, s)
+            ks_, vs_ = k[:, -keep:], v[:, -keep:]
+            start = (s - keep) % cache_len
+            kc = _ring_write(cache["k"], ks_, start)
+            vc = _ring_write(cache["v"], vs_, start)
+        else:
+            kc = jax.lax.dynamic_update_slice(cache["k"], k, (0, 0, 0, 0))
+            vc = jax.lax.dynamic_update_slice(cache["v"], v, (0, 0, 0, 0))
+        new_cache = dict(cache, k=kc, v=vc)
+    return out.reshape(b, s, -1) @ p["wo"], new_cache
+
+
+def _ring_write(buf, vals, start):
+    """Write vals into ring buffer starting at ``start`` (static shapes)."""
+    c = buf.shape[1]
+    n = vals.shape[1]
+    if n == c and isinstance(start, int) and start == 0:
+        return vals
+    idx = (jnp.arange(n) + start) % c
+    return buf.at[:, idx].set(vals)
+
+
+def _decode_attention(q, kc, vc, kv_pos, idx, scale, cap):
+    """Single-token attention over a cache with explicit key positions.
+
+    q: [B,1,Hq,hd]; kc/vc: [B,C,hkv,hd]; kv_pos: [C] (-1 = invalid).
+
+    GQA is computed as a grouped einsum — NEVER by materialising a repeated
+    KV: with the cache sharded on head_dim (kv-nondivisible archs) the
+    broadcast_to+reshape formulation forces GSPMD into involuntary full
+    rematerialisation of the whole cache (measured: 1.9 s collective term
+    for gemma2-9b decode_32k; grouped einsum: ~0.03 s).
+    """
+    b, _, hq, hd = q.shape
+    hkv = kc.shape[2]
+    rep = hq // hkv
+    qg = q.reshape(b, hkv, rep, hd)
+    s = jnp.einsum("bgrd,bsgd->bgrs", qg, kc).astype(jnp.float32) * scale
+    s = softcap(s, cap)
+    s = jnp.where((kv_pos >= 0)[None, None, None, :], s, -2.3819763e38)
+    pr = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bgrs,bsgd->bgrd", pr, vc)
+    return out.reshape(b, 1, hq, hd)
+
+
+# --------------------------------------------------------------------------
+# block and stack
+# --------------------------------------------------------------------------
+
+def _block_apply(x, p, cfg: ModelConfig, i: int, *, mode, positions,
+                 cache=None, constrain: Constrain = _ID, ep=None):
+    kind = cfg.layer_kind(i)
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "ssm":
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        y, cache = m2.mamba2_block(h, p["ssm"], cfg.ssm, mode=mode, cache=cache,
+                                   constrain=constrain)
+        return x + y, cache, aux
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    y, cache = attention_block(h, p["attn"], cfg, kind=kind, mode=mode,
+                               positions=positions, cache=cache,
+                               constrain=constrain)
+    x = x + y
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        y, aux = moe_block(h, p["moe"], cfg.moe, cfg.mlp_variant,
+                           constrain=constrain, ep=ep)
+    else:
+        y = mlp_block(h, p["mlp"], cfg.mlp_variant)
+        y = constrain(y, "act_ff_out")
+    return x + y, cache, aux
+
+
+def _shared_block_apply(x, p, cfg: ModelConfig, *, mode, positions, cache,
+                        constrain: Constrain = _ID):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    y, cache = attention_block(h, p["attn"], cfg, kind="attn", mode=mode,
+                               positions=positions, cache=cache,
+                               constrain=constrain)
+    x = x + y
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    x = x + mlp_block(h, p["mlp"], cfg.mlp_variant)
+    return x, cache
+
+
+def apply_stack(params, cfg: ModelConfig, x, *, mode, positions,
+                caches=None, constrain: Constrain = _ID, enc_out=None,
+                remat: bool = False, ep=None, remat_policy=None):
+    """x: [B,S,D] embeddings.  Returns (hidden, new_caches, aux_loss)."""
+    new_caches: Dict[str, Any] = {}
+    aux_total = jnp.zeros((), jnp.float32)
+    shared_i = 0
+    use_ckpt = remat and mode == "train"
+    for i in range(cfg.num_layers):
+        p = params["layers"][i]
+        c = caches.get(f"layer_{i}") if caches else None
+        if cfg.is_encoder_decoder:
+            x, c, aux = _decoder_block_apply(
+                x, p, cfg, mode=mode, positions=positions, cache=c,
+                constrain=constrain, enc_out=enc_out)
+        elif use_ckpt:
+            fn = lambda x_, p_, pos_, i_=i: _block_apply(
+                x_, p_, cfg, i_, mode="train", positions=pos_, cache=None,
+                constrain=constrain, ep=ep)
+            x, c, aux = jax.checkpoint(fn, policy=remat_policy)(x, p, positions)
+        else:
+            x, c, aux = _block_apply(x, p, cfg, i, mode=mode,
+                                     positions=positions, cache=c,
+                                     constrain=constrain, ep=ep)
+        aux_total = aux_total + aux
+        if c is not None:
+            new_caches[f"layer_{i}"] = c
+        x = constrain(x, "act_resid")
+        if (cfg.family == "hybrid" and cfg.hybrid_attn_every
+                and (i + 1) % cfg.hybrid_attn_every == 0):
+            sc = caches.get(f"shared_{shared_i}") if caches else None
+            x, sc = _shared_block_apply(
+                x, params["shared_block"], cfg, mode=mode,
+                positions=positions, cache=sc, constrain=constrain)
+            if sc is not None:
+                new_caches[f"shared_{shared_i}"] = sc
+            shared_i += 1
+    return x, new_caches, aux_total
+
+
+def _decoder_block_apply(x, p, cfg, *, mode, positions, cache, constrain,
+                         enc_out):
+    aux = jnp.zeros((), jnp.float32)
+    self_cache = cache.get("self") if cache else None
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    y, self_cache = attention_block(h, p["attn"], cfg, kind="attn", mode=mode,
+                                    positions=positions, cache=self_cache,
+                                    constrain=constrain)
+    x = x + y
+    # cross attention: K/V from encoder output (precomputed once in decode)
+    h = rms_norm(x, p["ln_cross"], cfg.norm_eps)
+    if cache and "cross_k" in cache:
+        ck, cv = cache["cross_k"], cache["cross_v"]
+    else:
+        b, se, _ = enc_out.shape
+        hd = cfg.resolved_head_dim
+        ck = (enc_out @ p["cross"]["wk"]).reshape(b, se, cfg.num_kv_heads, hd)
+        cv = (enc_out @ p["cross"]["wv"]).reshape(b, se, cfg.num_kv_heads, hd)
+    y, _ = attention_block(h, p["cross"], cfg, kind="attn", mode=mode,
+                           positions=None, cache=None, constrain=constrain,
+                           cross_kv=(ck, cv))
+    x = x + y
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    x = x + mlp_block(h, p["mlp"], cfg.mlp_variant)
+    new_cache = None
+    if self_cache is not None:
+        new_cache = {"self": self_cache, "cross_k": ck, "cross_v": cv}
+    return x, new_cache, aux
+
+
+def encode(params, cfg: ModelConfig, enc_emb, constrain: Constrain = _ID):
+    """Bidirectional encoder over precomputed frame embeddings."""
+    x = enc_emb
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    for p in params["encoder"]["layers"]:
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        q, k, v = _project_qkv(h, p["attn"], cfg, positions, constrain)
+        out = attention_full(q, k, v, causal=False, scale=_attn_scale(cfg))
+        x = x + out.reshape(b, s, -1) @ p["attn"]["wo"]
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + mlp_block(h, p["mlp"], cfg.mlp_variant)
+        x = constrain(x, "act_resid")
+    return rms_norm(x, params["encoder"]["final_norm"], cfg.norm_eps)
+
+
+# --------------------------------------------------------------------------
+# heads / losses / entry points
+# --------------------------------------------------------------------------
+
+def _embed(params, cfg: ModelConfig, tokens_or_emb):
+    if cfg.embedding_inputs and tokens_or_emb.ndim == 3:
+        return tokens_or_emb
+    return params["embed"][tokens_or_emb].astype(jnp.dtype(cfg.dtype))
+
+
+def _logits(params, cfg: ModelConfig, h, constrain: Constrain = _ID):
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = h @ head
+    if cfg.final_logit_softcap:
+        logits = softcap(logits.astype(jnp.float32),
+                         cfg.final_logit_softcap).astype(h.dtype)
+    return constrain(logits, "logits")
+
+
+def cross_entropy(logits, labels, vocab: int):
+    """logits: [B,S,V] (bf16, possibly vocab-sharded); labels: [B,S] int32.
+
+    Written so XLA fuses the [B,S,V]-sized intermediates into reductions:
+    no one-hot / f32 logits buffer is ever materialised (the peak-memory
+    killer at V=256k) — verified via memory_analysis in the dry-run.
+    """
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    shifted = (logits - m).astype(jnp.float32)
+    sumexp = jnp.sum(jnp.exp(shifted), axis=-1)
+    lse = jnp.log(sumexp) + m[..., 0].astype(jnp.float32)
+    eq = labels[..., None] == jax.lax.broadcasted_iota(
+        jnp.int32, logits.shape, len(logits.shape) - 1)
+    picked = jnp.sum(jnp.where(eq, shifted, 0.0), axis=-1)
+    picked = picked + m[..., 0].astype(jnp.float32)
+    return lse - picked                                    # per-token [B,S]
+
+
+def loss_fn(params, cfg: ModelConfig, batch, constrain: Constrain = _ID,
+            remat: bool = False, ep=None, remat_policy=None):
+    """batch: {"tokens" | "embeddings", "labels", ["positions"], ["enc_emb"]}"""
+    if cfg.is_encoder_decoder:
+        enc_out = encode(params, cfg, batch["enc_emb"], constrain)
+    else:
+        enc_out = None
+    x = _embed(params, cfg, batch.get("tokens", batch.get("embeddings")))
+    b, s = x.shape[0], x.shape[1]
+    positions = batch.get("positions")
+    if positions is None and not cfg.attention_free:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        if cfg.mrope:
+            positions = jnp.broadcast_to(positions[None], (3, b, s))
+    h, _, aux = apply_stack(params, cfg, x, mode="train", positions=positions,
+                            constrain=constrain, enc_out=enc_out, remat=remat,
+                            ep=ep, remat_policy=remat_policy)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = _logits(params, cfg, h, constrain)
+    per_tok = cross_entropy(logits, batch["labels"], cfg.vocab_size)
+    w = batch.get("loss_weight")                           # [B] per-sample
+    if w is not None:
+        # Raptor redundant-DP: zero weight == dropped/preempted flight
+        # member; mean renormalises over the surviving samples.
+        wt = w.astype(jnp.float32)[:, None]
+        ce = (per_tok * wt).sum() / jnp.maximum(
+            wt.sum() * per_tok.shape[1], 1.0)
+    else:
+        ce = per_tok.mean()
+    return ce + 0.01 * aux, {"ce": ce, "aux": aux}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, enc_len: int = 0):
+    """Preallocated decode cache pytree (all zeros)."""
+    dtype = jnp.dtype(cfg.dtype)
+    hd = cfg.resolved_head_dim
+    caches: Dict[str, Any] = {"index": jnp.zeros((), jnp.int32)}
+
+    def kv(c_len):
+        return {"k": jnp.zeros((batch, c_len, cfg.num_kv_heads, hd), dtype),
+                "v": jnp.zeros((batch, c_len, cfg.num_kv_heads, hd), dtype)}
+
+    for i in range(cfg.num_layers):
+        kind = cfg.layer_kind(i)
+        if kind == "ssm":
+            caches[f"layer_{i}"] = m2.init_ssm_cache(batch, cfg.d_model, cfg.ssm, dtype)
+        elif cfg.is_encoder_decoder:
+            caches[f"layer_{i}"] = {
+                "self": kv(max_len),
+                "cross_k": jnp.zeros((batch, enc_len, cfg.num_kv_heads, hd), dtype),
+                "cross_v": jnp.zeros((batch, enc_len, cfg.num_kv_heads, hd), dtype),
+            }
+        else:
+            c_len = min(cfg.window_size, max_len) if kind == "local_attn" else max_len
+            caches[f"layer_{i}"] = kv(c_len)
+    if cfg.family == "hybrid" and cfg.hybrid_attn_every:
+        for j in range(cfg.num_layers // cfg.hybrid_attn_every):
+            caches[f"shared_{j}"] = kv(max_len)
+    return caches
+
+
+def prefill(params, cfg: ModelConfig, batch, max_len: int,
+            constrain: Constrain = _ID, ep=None):
+    """Run the full prompt, return (last-position logits, filled cache)."""
+    if cfg.is_encoder_decoder:
+        enc_out = encode(params, cfg, batch["enc_emb"], constrain)
+    else:
+        enc_out = None
+    x = _embed(params, cfg, batch.get("tokens", batch.get("embeddings")))
+    b, s = x.shape[0], x.shape[1]
+    positions = batch.get("positions")
+    if positions is None and not cfg.attention_free:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        if cfg.mrope:
+            positions = jnp.broadcast_to(positions[None], (3, b, s))
+    caches = init_cache(cfg, b, max_len,
+                        enc_len=enc_out.shape[1] if enc_out is not None else 0)
+    h, new_caches, _ = apply_stack(params, cfg, x, mode="prefill",
+                                   positions=positions, caches=caches,
+                                   constrain=constrain, enc_out=enc_out, ep=ep)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = _logits(params, cfg, h[:, -1:], constrain)
+    new_caches["index"] = jnp.full((), s, jnp.int32)
+    return logits[:, 0], new_caches
+
+
+def decode_step(params, cfg: ModelConfig, caches, tokens,
+                constrain: Constrain = _ID, enc_out=None, ep=None):
+    """One decode step.  tokens: [B,1] int32 (or [B,1,D] embeddings)."""
+    x = _embed(params, cfg, tokens)
+    b = x.shape[0]
+    idx = caches["index"]
+    if cfg.mrope:
+        positions = jnp.broadcast_to(idx[None, None, None], (3, b, 1)).astype(jnp.int32)
+    else:
+        positions = jnp.broadcast_to(idx[None, None], (b, 1)).astype(jnp.int32)
+    if cfg.attention_free:
+        positions = None
+    # thread the index into per-layer caches for ring addressing
+    run_caches = {k: (dict(v, index=idx) if isinstance(v, dict) and "k" in v
+                      else ({**v, "self": dict(v["self"], index=idx)}
+                            if isinstance(v, dict) and "self" in v else v))
+                  for k, v in caches.items() if k != "index"}
+    h, new_caches, _ = apply_stack(params, cfg, x, mode="decode",
+                                   positions=positions, caches=run_caches,
+                                   constrain=constrain, enc_out=enc_out, ep=ep)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = _logits(params, cfg, h, constrain)
+    out_caches = {}
+    for k, v in new_caches.items():
+        if isinstance(v, dict) and "index" in v:
+            v = {kk: vv for kk, vv in v.items() if kk != "index"}
+        elif isinstance(v, dict) and "self" in v and "index" in v["self"]:
+            v = dict(v, self={kk: vv for kk, vv in v["self"].items() if kk != "index"})
+        out_caches[k] = v
+    out_caches["index"] = idx + 1
+    return logits[:, 0], out_caches

@@ -1,0 +1,36 @@
+"""Serving step builders: prefill and decode as pure jit-able functions."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tfm
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int, constrain=tfm._ID,
+                      ep=None):
+    def prefill_step(params, batch):
+        return tfm.prefill(params, cfg, batch, max_len, constrain=constrain,
+                           ep=ep)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, constrain=tfm._ID, ep=None):
+    def decode_step(params, caches, tokens):
+        return tfm.decode_step(params, cfg, caches, tokens,
+                               constrain=constrain, ep=ep)
+    return decode_step
+
+
+def cache_shape(cfg: ModelConfig, batch: int, max_len: int, enc_len: int = 0):
+    """ShapeDtypeStruct pytree of the decode cache (no allocation)."""
+    fn = lambda: tfm.init_cache(cfg, batch, max_len, enc_len)
+    shapes = jax.eval_shape(fn)
+    return shapes
+
+
+def greedy_sample(logits):
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)

@@ -1,0 +1,115 @@
+"""Cluster model: workers across availability zones, control-plane overhead,
+and AZ-correlated service times (the paper's central mechanism).
+
+Correlation model (DESIGN.md §2, paper §4.2.1): the execution time of an
+entropy-bound task ``t`` on worker ``w`` within one invocation is
+
+    Z = rho * S(t, az(w)) + (1 - rho) * X(t, w)
+
+with S and X i.i.d. exponential(mu), S shared by every worker in the same
+AZ.  Replicas co-located in one AZ therefore see nearly identical delays
+(rho -> 1: speculation is useless), while replicas spread across AZs draw
+independent S and are nearly independent (the full E[min] win).  A
+1-AZ/5-worker deployment forces same-AZ placement; the 3-AZ/15-worker HA
+deployment spreads flights across AZs — reproducing the paper's scale
+effect without any other change.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class OverheadModel:
+    """Control-plane latency (paper Table 6) as a lognormal per (ha, load)."""
+    TABLE = {
+        (True, "low"): (8.0, 14.0), (True, "medium"): (9.0, 16.0),
+        (True, "high"): (9.0, 15.0),
+        (False, "low"): (6.0, 12.0), (False, "medium"): (6.0, 9.0),
+        (False, "high"): (7.0, 15.0),
+    }
+
+    def sample(self, rng, ha: bool, load: str, n: int = 1) -> np.ndarray:
+        med, p90 = self.TABLE[(ha, load)]
+        mu = np.log(med)
+        sigma = max((np.log(p90) - mu) / 1.2816, 0.05)
+        return np.exp(rng.normal(mu, sigma, size=n))
+
+
+class InvocationDraws:
+    """Correlated service-time draws for ONE invocation of a manifest."""
+
+    def __init__(self, cluster: "Cluster", mean_ms: float, offset_ms: float,
+                 dist: str = "exp", cv: float = 1.0):
+        self.cl = cluster
+        self.mean = mean_ms
+        self.offset = offset_ms
+        self.dist = dist
+        self.cv = cv
+        self._shared: Dict[tuple, float] = {}
+
+    def _base_draw(self) -> float:
+        rng = self.cl.rng
+        if self.dist == "exp":
+            return float(rng.exponential(self.mean))
+        # lognormal with given cv (thumbnail-style deterministic-ish tasks)
+        sigma2 = np.log(1 + self.cv ** 2)
+        mu = np.log(self.mean) - sigma2 / 2
+        return float(np.exp(rng.normal(mu, np.sqrt(sigma2))))
+
+    def draw(self, task: str, worker: int) -> float:
+        az = int(self.cl.az_of[worker])
+        key = (task, az)
+        if key not in self._shared:
+            self._shared[key] = self._base_draw()
+        s = self._shared[key]
+        x = self._base_draw()
+        rho = self.cl.rho
+        return rho * s + (1 - rho) * x + self.offset
+
+
+@dataclasses.dataclass
+class Cluster:
+    num_workers: int = 15
+    num_azs: int = 3
+    rho: float = 0.95          # AZ-shared fraction of service time
+    seed: int = 0
+
+    def __post_init__(self):
+        self.rng = np.random.default_rng(self.seed)
+        self.az_of = np.arange(self.num_workers) % self.num_azs
+        self.overhead = OverheadModel()
+
+    @property
+    def ha(self) -> bool:
+        return self.num_azs > 1
+
+    def sample_overhead(self, load: str, n: int = 1) -> np.ndarray:
+        return self.overhead.sample(self.rng, self.ha, load, n)
+
+    def draws(self, mean_ms: float, offset_ms: float = 0.0, dist: str = "exp",
+              cv: float = 1.0) -> InvocationDraws:
+        return InvocationDraws(self, mean_ms, offset_ms, dist, cv)
+
+    def place_flight(self, size: int, busy: Optional[set] = None) -> List[int]:
+        """HA placement: spread flight members over AZs first."""
+        busy = busy or set()
+        free = [w for w in range(self.num_workers) if w not in busy]
+        by_az: Dict[int, List[int]] = {}
+        for w in free:
+            by_az.setdefault(int(self.az_of[w]), []).append(w)
+        for ws in by_az.values():
+            self.rng.shuffle(ws)
+        azs = list(by_az)
+        self.rng.shuffle(azs)
+        picked: List[int] = []
+        i = 0
+        while len(picked) < size and any(by_az.values()):
+            az = azs[i % len(azs)]
+            if by_az[az]:
+                picked.append(by_az[az].pop())
+            i += 1
+        return picked

@@ -1,0 +1,34 @@
+"""Minimal cancellable discrete-event engine for the cluster simulator."""
+from __future__ import annotations
+
+import heapq
+import itertools
+from typing import Any, Callable, Dict, Optional
+
+
+class EventQueue:
+    def __init__(self):
+        self._pq = []
+        self._counter = itertools.count()
+        self._cancelled = set()
+        self.now = 0.0
+
+    def schedule(self, t: float, fn: Callable, *args) -> int:
+        eid = next(self._counter)
+        heapq.heappush(self._pq, (t, eid, fn, args))
+        return eid
+
+    def cancel(self, eid: int):
+        self._cancelled.add(eid)
+
+    def run(self, until: float = float("inf")):
+        while self._pq:
+            t, eid, fn, args = heapq.heappop(self._pq)
+            if eid in self._cancelled:
+                self._cancelled.discard(eid)
+                continue
+            if t > until:
+                self.now = until
+                return
+            self.now = t
+            fn(*args)

@@ -1,0 +1,119 @@
+"""Paper-experiment drivers: one function per table/figure (DESIGN.md §7)."""
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+from repro.core.analytics import (forkjoin_failure, raptor_failure,
+                                  raptor_failure_exact, response_ratio_paper,
+                                  summarize)
+from repro.sim.cluster import Cluster
+from repro.sim.flights import FlightSim
+from repro.sim.workloads import (keygen_workload, reliability_workload,
+                                 thumbnail_workload, wordcount_workload)
+
+HA = dict(num_workers=15, num_azs=3)
+LOW_AVAIL = dict(num_workers=5, num_azs=1)
+
+# load levels as utilisation targets of the flight variant's capacity
+UTIL = {"low": 0.18, "medium": 0.45, "high": 0.75}
+
+
+def rate_for(wl, deployment: Dict, load: str) -> float:
+    return UTIL[load] * deployment["num_workers"] / wl.work_est_ws
+
+
+def run_pair(wl_fn, deployment: Dict, *, load: str = "medium",
+             duration_s: float = 1800.0, seed: int = 0,
+             rho: float = 0.95, rotate: bool = True) -> Dict[str, dict]:
+    """Simulate a workload with and without Raptor; returns summary stats."""
+    out = {}
+    for raptor in (False, True):
+        cl = Cluster(rho=rho, seed=seed, **deployment)
+        wl = wl_fn()
+        sim = FlightSim(cl, wl, raptor=raptor,
+                        arrival_rate_hz=rate_for(wl, deployment, load),
+                        duration_s=duration_s, load=load, seed=seed,
+                        rotate=rotate)
+        jobs = sim.run()
+        s = summarize([j.response for j in jobs])
+        s["work_mean"] = float(np.mean([j.work_ms for j in jobs]))
+        s["fail_rate"] = float(np.mean([not j.ok for j in jobs]))
+        out["raptor" if raptor else "stock"] = s
+    out["mean_ratio"] = out["raptor"]["mean"] / out["stock"]["mean"]
+    return out
+
+
+def table6_overhead(n: int = 20000, seed: int = 0) -> Dict:
+    """Control-plane overhead medians/p90s per (availability, load)."""
+    rows = {}
+    for ha, label in ((True, "three_az"), (False, "one_az")):
+        cl = Cluster(seed=seed, **(HA if ha else LOW_AVAIL))
+        for load in ("low", "medium", "high"):
+            s = cl.sample_overhead(load, n)
+            rows[f"{label}/{load}"] = {
+                "median": float(np.median(s)),
+                "p90": float(np.percentile(s, 90)),
+            }
+    return rows
+
+
+def table7_keygen(seed: int = 0, duration_s: float = 1800.0) -> Dict:
+    """SSH keygen on the HA deployment at moderate load (+ theory check)."""
+    res = run_pair(keygen_workload, HA, load="medium", seed=seed,
+                   duration_s=duration_s)
+    res["theory_ratio"] = response_ratio_paper()
+    return res
+
+
+def fig6_scale_effect(seed: int = 0, duration_s: float = 1800.0) -> Dict:
+    """Raptor benefit vs deployment scale and load (the paper's headline).
+
+    Low-availability 1-AZ/5-worker: replicas co-located -> correlated ->
+    ~no benefit.  HA 3-AZ/15-worker: independent -> ~2/3 ratio.
+    """
+    out = {}
+    for name, dep in (("one_az_5w", LOW_AVAIL), ("three_az_15w", HA)):
+        for load in ("low", "medium", "high"):
+            wl0 = keygen_workload()
+            hz = rate_for(wl0, dep, load)
+            res = {}
+            for raptor in (False, True):
+                cl = Cluster(rho=0.95, seed=seed, **dep)
+                sim = FlightSim(cl, keygen_workload(), raptor=raptor,
+                                arrival_rate_hz=hz, duration_s=duration_s,
+                                load=load, seed=seed)
+                jobs = sim.run()
+                res["raptor" if raptor else "stock"] = summarize(
+                    [j.response for j in jobs])
+            res["mean_ratio"] = res["raptor"]["mean"] / res["stock"]["mean"]
+            out[f"{name}/{load}"] = res
+    return out
+
+
+def fig7_other_workloads(seed: int = 0, duration_s: float = 1800.0) -> Dict:
+    return {
+        "wordcount": run_pair(wordcount_workload, HA, seed=seed,
+                              duration_s=duration_s),
+        "thumbnail": run_pair(thumbnail_workload, HA, seed=seed,
+                              duration_s=duration_s),
+    }
+
+
+def fig8_reliability(seed: int = 0, n_jobs_s: float = 600.0) -> Dict:
+    """Job vs task failure probability, N parallel tasks."""
+    out = {}
+    for n_tasks in (2, 4, 8):
+        for p in (0.05, 0.1, 0.2, 0.3):
+            wl = lambda: reliability_workload(n_tasks, p)
+            res = run_pair(wl, HA, load="low", duration_s=n_jobs_s,
+                           seed=seed)
+            out[f"n{n_tasks}/p{p}"] = {
+                "stock_fail": res["stock"]["fail_rate"],
+                "raptor_fail": res["raptor"]["fail_rate"],
+                "theory_stock": forkjoin_failure(p, n_tasks),
+                "theory_raptor": raptor_failure(p, n_tasks),
+                "theory_raptor_exact": raptor_failure_exact(p, n_tasks),
+            }
+    return out

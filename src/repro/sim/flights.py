@@ -1,0 +1,283 @@
+"""Queueing + flight simulator: stock OpenWhisk fork-join vs Raptor flights
+on a worker cluster, with Poisson arrivals, preemption, and work accounting.
+
+Stock mode: a job's tasks queue independently FCFS for workers as their
+dependencies complete; each inter-stage hop pays the control-plane overhead
+plus any storage round-trip (``stock_stage_overhead``); the job completes
+when all tasks do (fork-join).
+
+Raptor mode: a job is one flight of ``concurrency`` members over distinct
+workers (HA placement spreads them across AZs).  Members run the manifest
+in cyclically shifted order (§3.3.3), skip tasks whose first completion has
+been broadcast, and are preempted mid-task when a peer finishes first —
+their worker is freed after the half-RTT stream latency (§3.3.4).  Member
+task failures degrade the flight; the job fails only if every member fails
+(Figure 8's p^N).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List
+
+import numpy as np
+
+from repro.sim.cluster import Cluster
+from repro.sim.events import EventQueue
+
+
+@dataclasses.dataclass
+class SimWorkload:
+    """Service-time model of one manifest."""
+    name: str
+    tasks: List[str]
+    deps: Dict[str, tuple]
+    concurrency: int
+    make_draws: Callable                 # cluster -> InvocationDraws
+    stock_stage_overhead: float = 0.0    # storage/requeue per stage hop (ms)
+    raptor_stage_overhead: float = 0.5   # stream hop (ms)
+    fail_prob: float = 0.0
+    work_est_ws: float = 2.0             # worker-seconds/job (load targeting)
+    # optional alternative task graph for the STOCK path (workloads whose
+    # stock functions are self-contained, e.g. thumbnail re-downloads)
+    stock_tasks: List[str] = None
+    stock_deps: Dict[str, tuple] = None
+
+    @property
+    def stock_task_list(self):
+        return self.stock_tasks if self.stock_tasks is not None else self.tasks
+
+    @property
+    def stock_dep_map(self):
+        return self.stock_deps if self.stock_deps is not None else self.deps
+
+
+@dataclasses.dataclass
+class JobRecord:
+    t_arrive: float
+    t_done: float = -1.0
+    ok: bool = True
+    work_ms: float = 0.0
+
+    @property
+    def response(self) -> float:
+        return self.t_done - self.t_arrive
+
+
+class FlightSim:
+    def __init__(self, cluster: Cluster, wl: SimWorkload, *, raptor: bool,
+                 arrival_rate_hz: float, duration_s: float = 1800.0,
+                 load: str = "medium", stream_latency_ms: float = 0.5,
+                 seed: int = 0, rotate: bool = True):
+        """rotate=True (default) uses the paper's §3.3.3 cyclic-shift
+        sequences — essential for parallelizable DAGs (racing one shared
+        order serialises them).  rotate=False has all members race the same
+        sequence, the dynamics the paper's §4.2.1 2*E[min]/E[max] equation
+        actually describes (see EXPERIMENTS.md for the measured gap)."""
+        self.cl = cluster
+        self.wl = wl
+        self.raptor = raptor
+        self.lam = arrival_rate_hz
+        self.duration_ms = duration_s * 1000
+        self.load = load
+        self.slat = stream_latency_ms
+        self.rng = np.random.default_rng(seed + 1)
+        self.q = EventQueue()
+        self.free = set(range(cluster.num_workers))
+        self.backlog: List = []
+        self.jobs: List[JobRecord] = []
+        n_seq = max(wl.concurrency, 1) if rotate else 1
+        self._seqs = [self._exec_sequence(i) for i in range(n_seq)]
+
+    # ------------------------------------------------------------------
+    def run(self) -> List[JobRecord]:
+        t = float(self.rng.exponential(1000.0 / self.lam))
+        while t < self.duration_ms:
+            self.q.schedule(t, self._arrive)
+            t += float(self.rng.exponential(1000.0 / self.lam))
+        self.q.run()
+        return [j for j in self.jobs if j.t_done >= 0]
+
+    def _arrive(self):
+        rec = JobRecord(t_arrive=self.q.now)
+        self.jobs.append(rec)
+        overhead = float(self.cl.sample_overhead(self.load, 1)[0])
+        draws = self.wl.make_draws(self.cl)
+        draws.raptor = self.raptor
+        if self.raptor:
+            fl = {
+                "rec": rec, "members": [], "draws": draws,
+                "ptr": {}, "seq_idx": {},
+                "done": {}, "running": {},
+                "released": set(), "failed_members": set(),
+                "n_members": 0,
+            }
+            for m in range(max(self.wl.concurrency, 1)):
+                oh = overhead if m == 0 else overhead + float(
+                    self.cl.sample_overhead(self.load, 1)[0])
+                self.backlog.append(("member", fl, m, oh))
+            self._dispatch()
+        else:
+            state = {"rec": rec, "done": set(), "queued": set(),
+                     "draws": draws}
+            self._stock_enqueue_ready(state, overhead)
+
+    def _ready(self, done: set) -> List[str]:
+        return [t for t in self.wl.stock_task_list
+                if t not in done
+                and all(d in done for d in self.wl.stock_dep_map[t])]
+
+    def _stock_enqueue_ready(self, state, overhead):
+        """Stage hops (control plane + storage round-trips) elapse BEFORE a
+        worker is occupied — they are control-path delays, not service."""
+        for task in self._ready(state["done"]):
+            if task not in state["queued"]:
+                state["queued"].add(task)
+                self.q.schedule(self.q.now + overhead, self._stock_push,
+                                state, task)
+
+    def _stock_push(self, state, task):
+        self.backlog.append(("task", state["rec"], task, state))
+        self._dispatch()
+
+    # ------------------------------------------------------------------
+    def _dispatch(self):
+        while self.backlog and self.free:
+            kind = self.backlog[0][0]
+            if kind == "task":
+                _, rec, task, state = self.backlog.pop(0)
+                w = self.free.pop()
+                svc = state["draws"].draw(task, w)
+                fail = self.rng.random() < self.wl.fail_prob
+                self.q.schedule(self.q.now + svc,
+                                self._stock_finish, rec, state, task, w,
+                                fail, svc)
+            else:
+                # one flight MEMBER (paper §3.3.2: the fork's recursive
+                # invocations queue independently and join the stream late)
+                _, fl, member_idx, overhead = self.backlog.pop(0)
+                if fl["rec"].t_done >= 0:
+                    continue                      # flight already finished
+                w = self._pick_worker_for(fl)
+                self.free.discard(w)
+                self._join_member(fl, w, member_idx, overhead)
+
+    def _pick_worker_for(self, fl) -> int:
+        """HA-aware pick: prefer AZs not yet used by this flight."""
+        used_azs = {int(self.cl.az_of[w]) for w in fl["members"]}
+        fresh = [w for w in self.free
+                 if int(self.cl.az_of[w]) not in used_azs]
+        pool = fresh if fresh else list(self.free)
+        return pool[int(self.rng.integers(len(pool)))]
+
+    # ------------------------------------------------------------------
+    # stock OpenWhisk fork-join
+    def _stock_finish(self, rec, state, task, worker, fail, svc):
+        self.free.add(worker)
+        rec.work_ms += svc
+        if fail:
+            rec.ok = False
+        state["done"].add(task)
+        oh = self.wl.stock_stage_overhead + float(
+            self.cl.sample_overhead(self.load, 1)[0])
+        self._stock_enqueue_ready(state, oh)
+        if len(state["done"]) == len(self.wl.stock_task_list):
+            rec.t_done = self.q.now
+        self._dispatch()
+
+    # ------------------------------------------------------------------
+    # Raptor flight
+    def _join_member(self, fl, w: int, member_idx: int, overhead: float):
+        fl["members"].append(w)
+        fl["seq_idx"][w] = member_idx % len(self._seqs)
+        fl["ptr"][w] = 0
+        fl["n_members"] += 1
+        self.q.schedule(self.q.now + overhead, self._member_next, fl, w)
+
+    def _exec_sequence(self, index: int) -> List[str]:
+        from repro.core.dag import execution_sequence
+        from repro.core.manifest import ActionManifest, FunctionSpec
+        man = ActionManifest(
+            tuple(FunctionSpec(t, None, tuple(self.wl.deps[t]))
+                  for t in self.wl.tasks),
+            concurrency=max(self.wl.concurrency, 1), name=self.wl.name)
+        return execution_sequence(man, index)
+
+    def _member_next(self, fl, w):
+        if fl["rec"].t_done >= 0 or w in fl["released"]:
+            return
+        seq = self._seqs[fl["seq_idx"][w]]
+        ptr = fl["ptr"][w]
+        while ptr < len(seq):
+            task = seq[ptr]
+            if task in fl["done"]:
+                ptr += 1
+                continue
+            if all(d in fl["done"] for d in self.wl.deps[task]):
+                break
+            # dependency not yet visible on the stream: poll after a hop
+            fl["ptr"][w] = ptr
+            self.q.schedule(self.q.now + max(self.slat, 0.1),
+                            self._member_next, fl, w)
+            return
+        fl["ptr"][w] = ptr
+        if ptr >= len(seq):
+            fl.setdefault("done_members", set()).add(w)
+            self._release_member(fl, w)
+            # job fails once every member has exhausted its sequence with
+            # tasks still incomplete (all attempts of some task errored)
+            if (len(fl["done_members"]) >= max(self.wl.concurrency, 1)
+                    and len(fl["done"]) < len(self.wl.tasks)
+                    and fl["rec"].t_done < 0):
+                fl["rec"].t_done = self.q.now
+                fl["rec"].ok = False
+                self._finish_flight(fl)
+            return
+        task = seq[ptr]
+        svc = fl["draws"].draw(task, w)
+        fail = self.rng.random() < self.wl.fail_prob
+        eid = self.q.schedule(
+            self.q.now + svc + self.wl.raptor_stage_overhead,
+            self._member_finish, fl, w, task, fail, self.q.now)
+        fl["running"][w] = (task, eid, self.q.now)
+
+    def _member_finish(self, fl, w, task, fail, t0):
+        fl["running"].pop(w, None)
+        fl["rec"].work_ms += self.q.now - t0
+        fl["ptr"][w] += 1
+        if fail:
+            # §3.3.4: the error event is broadcast and IGNORED by peers; the
+            # member moves on.  The task stays pending for other members.
+            fl["failed_members"].add(w)
+            self.q.schedule(self.q.now, self._member_next, fl, w)
+            return
+        if task not in fl["done"]:
+            fl["done"][task] = self.q.now
+            # broadcast: preempt peers running `task` (half-RTT delivery)
+            for pw, (ptask, eid, pt0) in list(fl["running"].items()):
+                if ptask == task:
+                    self.q.cancel(eid)
+                    fl["running"].pop(pw)
+                    fl["rec"].work_ms += (self.q.now + self.slat) - pt0
+                    fl["ptr"][pw] += 0
+                    self.q.schedule(self.q.now + self.slat,
+                                    self._member_next, fl, pw)
+        if len(fl["done"]) == len(self.wl.tasks):
+            fl["rec"].t_done = self.q.now
+            fl["rec"].ok = True
+            self._finish_flight(fl)
+            return
+        self.q.schedule(self.q.now, self._member_next, fl, w)
+
+    def _finish_flight(self, fl):
+        for pw, (ptask, eid, pt0) in list(fl["running"].items()):
+            self.q.cancel(eid)
+            fl["rec"].work_ms += self.q.now - pt0
+            fl["running"].pop(pw)
+        for pw in fl["members"]:
+            self._release_member(fl, pw)
+
+    def _release_member(self, fl, w):
+        if w not in fl["released"]:
+            fl["released"].add(w)
+            self.free.add(w)
+            self._dispatch()

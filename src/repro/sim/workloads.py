@@ -1,0 +1,127 @@
+"""The paper's three evaluation workloads as service-time models (§4.2).
+
+Calibration: constants are fit so the STOCK OpenWhisk path reproduces the
+"w/o Raptor" column of Table 7 on the HA 3-AZ cluster at moderate load; the
+Raptor path is then *prediction*, not fit — its match to the "w/ Raptor"
+column (and to 2*E[min]/E[max] = 2/3) is the reproduction result.
+"""
+from __future__ import annotations
+
+from repro.sim.cluster import Cluster
+from repro.sim.flights import SimWorkload
+
+# ---- ssh-keygen: two entropy-bound tasks, flight of 2 (Table 8) ----------
+# lognormal(mean 875 ms, cv 1.45) + 40 ms offset: fit to the STOCK column of
+# Table 7 (gives 1399/936/2885 vs paper 1335/939/2887); heavy tail matches
+# the paper's med/mean = 0.70, p90/mean = 2.16 better than an exponential.
+KEYGEN_MEAN_MS = 875.0
+KEYGEN_CV = 1.45
+KEYGEN_OFFSET_MS = 40.0
+
+
+def keygen_workload(fail_prob: float = 0.0) -> SimWorkload:
+    return SimWorkload(
+        name="ssh-keygen",
+        tasks=["keygen_a", "keygen_b"],
+        deps={"keygen_a": (), "keygen_b": ()},
+        concurrency=2,
+        make_draws=lambda cl: cl.draws(KEYGEN_MEAN_MS, KEYGEN_OFFSET_MS,
+                                       "lognorm", cv=KEYGEN_CV),
+        stock_stage_overhead=0.0,
+        fail_prob=fail_prob,
+        work_est_ws=1.9,
+    )
+
+
+# ---- word count: serverless map-reduce (AWS-style ad-hoc pipeline) --------
+WC_SPLIT_MS = 300.0
+WC_MAP_MS = 700.0
+WC_REDUCE_MS = 420.0
+WC_STORAGE_HOP_MS = 800.0      # S3/GCS round-trip on the stock control path
+
+
+def wordcount_workload() -> SimWorkload:
+    means = {"split": WC_SPLIT_MS, "reduce": WC_REDUCE_MS}
+    means.update({f"map{i}": WC_MAP_MS for i in range(4)})
+
+    def make_draws(cl: Cluster):
+        base = cl.draws(1.0, 0.0, "exp")
+        draw0 = base.draw
+
+        def draw(task, worker):
+            return draw0(task, worker) * means[task]
+        base.draw = draw
+        return base
+
+    deps = {"split": (), "reduce": tuple(f"map{i}" for i in range(4))}
+    deps.update({f"map{i}": ("split",) for i in range(4)})
+    return SimWorkload(
+        name="wordcount",
+        tasks=["split", "map0", "map1", "map2", "map3", "reduce"],
+        deps=deps,
+        concurrency=2,
+        make_draws=make_draws,
+        stock_stage_overhead=WC_STORAGE_HOP_MS,
+        work_est_ws=4.2,
+    )
+
+
+# ---- thumbnails: download stage + 4 resize tasks, flight of 4 -------------
+# Paper §4.2.2: the source image is downloaded, then four thumbnails of
+# different sizes are generated and uploaded.  STOCK functions are
+# self-contained (each re-downloads the source: task = download + resize);
+# Raptor's manifest factors the download out and the state-sharing stream
+# hands the bytes to every member — the data-path short-circuit that gives
+# the paper's "muted but still positive" ~11% win on this deterministic
+# workload.
+THUMB_DOWNLOAD_MS = 480.0
+THUMB_RESIZE_MS = 800.0
+THUMB_CV = 0.22
+
+
+def thumbnail_workload() -> SimWorkload:
+    means = {"download": THUMB_DOWNLOAD_MS}
+    means.update({f"thumb{i}": THUMB_RESIZE_MS for i in range(4)})
+
+    def make_draws(cl: Cluster):
+        base = cl.draws(1.0, 0.0, "lognorm", cv=THUMB_CV)
+        draw0 = base.draw
+
+        def draw(task, worker):
+            t = draw0(task, worker) * means[task]
+            if task.startswith("thumb") and not getattr(base, "raptor", False):
+                # stock path: self-contained function re-downloads source
+                t += draw0(task + "_dl", worker) * THUMB_DOWNLOAD_MS
+            return t
+        base.draw = draw
+        return base
+
+    deps = {"download": ()}
+    deps.update({f"thumb{i}": ("download",) for i in range(4)})
+    thumbs = [f"thumb{i}" for i in range(4)]
+    return SimWorkload(
+        name="thumbnail",
+        tasks=["download"] + thumbs,
+        deps=deps,
+        concurrency=4,
+        make_draws=make_draws,
+        stock_stage_overhead=0.0,
+        work_est_ws=5.6,
+        stock_tasks=thumbs,                 # stock fns are self-contained
+        stock_deps={t: () for t in thumbs},
+    )
+
+
+# ---- reliability probe: N parallel 100ms busy-waits (Figure 8) ------------
+
+def reliability_workload(n_tasks: int, fail_prob: float) -> SimWorkload:
+    tasks = [f"busy{i}" for i in range(n_tasks)]
+    return SimWorkload(
+        name=f"busy{n_tasks}",
+        tasks=tasks,
+        deps={t: () for t in tasks},
+        concurrency=n_tasks,
+        make_draws=lambda cl: cl.draws(100.0, 0.0, "lognorm", cv=0.05),
+        fail_prob=fail_prob,
+        work_est_ws=0.1 * n_tasks * 2,
+    )

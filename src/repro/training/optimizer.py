@@ -1,0 +1,86 @@
+"""AdamW with cosine schedule, gradient clipping, and ZeRO-friendly layout.
+
+Pure-pytree implementation (no optax dependency).  Moments are stored in
+``cfg.optimizer_state_dtype`` — bf16 for the 400B llama4 config so the
+train_4k cell fits HBM (DESIGN.md §4); update math is always f32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    state_dtype: str = "float32"
+
+
+def lr_at(step, oc: OptConfig):
+    step = step.astype(jnp.float32)
+    warm = oc.lr * (step + 1) / max(oc.warmup_steps, 1)
+    t = jnp.clip((step - oc.warmup_steps)
+                 / max(oc.total_steps - oc.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.1 * oc.lr + 0.9 * oc.lr * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < oc.warmup_steps, warm, cos)
+
+
+def init_opt_state(params, oc: OptConfig) -> Dict[str, Any]:
+    dt = jnp.dtype(oc.state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree):
+    leaves = [jnp.sum(jnp.square(l.astype(jnp.float32)))
+              for l in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(grads, opt_state, params, oc: OptConfig):
+    """Returns (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"]
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, oc.clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = lr_at(step, oc)
+    t = (step + 1).astype(jnp.float32)
+    bc1 = 1 - oc.b1 ** t
+    bc2 = 1 - oc.b2 ** t
+    sdt = jnp.dtype(oc.state_dtype)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = oc.b1 * m.astype(jnp.float32) + (1 - oc.b1) * g
+        v32 = oc.b2 * v.astype(jnp.float32) + (1 - oc.b2) * jnp.square(g)
+        mhat = m32 / bc1
+        vhat = v32 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + oc.eps)
+        if p.ndim >= 2:   # decoupled weight decay on matrices only
+            delta = delta + oc.weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * delta
+        return newp.astype(p.dtype), m32.astype(sdt), v32.astype(sdt)
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(opt_state["mu"])
+    flat_v = jax.tree_util.tree_leaves(opt_state["nu"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    new_state = {"mu": new_m, "nu": new_v, "step": step + 1}
+    return new_p, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,70 @@
+"""Train-step builder: loss -> grad -> (optional raptor k-of-n / compression)
+-> AdamW.  Returns pure functions suitable for jit/lower on any mesh."""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tfm
+from repro.training.optimizer import OptConfig, adamw_update, init_opt_state
+
+
+@dataclasses.dataclass(frozen=True)
+class StepOptions:
+    remat: bool = True
+    remat_policy: Optional[str] = None       # None(full) | "dots"
+    grad_compression: Optional[str] = None   # None | "bf16" | "int8"
+    raptor_k_of_n: Optional[tuple] = None    # (k, axis_name) straggler drop
+
+
+def make_loss_fn(cfg: ModelConfig, constrain=tfm._ID, remat: bool = True,
+                 ep=None, remat_policy: Optional[str] = None):
+    policy = None
+    if remat_policy == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+
+    def loss(params, batch):
+        return tfm.loss_fn(params, cfg, batch, constrain=constrain,
+                           remat=remat, ep=ep, remat_policy=policy)
+    return loss
+
+
+def make_train_step(cfg: ModelConfig, oc: OptConfig, *, constrain=tfm._ID,
+                    options: StepOptions = StepOptions(),
+                    grad_transform: Optional[Callable] = None, ep=None):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    state = {"params": ..., "opt": ...}.  ``grad_transform(grads)`` is the
+    injection point for Raptor k-of-n selection / compression (see
+    repro.training.raptor_dp and repro.distributed.collectives).
+    """
+    loss_fn = make_loss_fn(cfg, constrain, options.remat, ep=ep,
+                           remat_policy=options.remat_policy)
+
+    def train_step(state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state["params"], batch)
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        params, opt, opt_metrics = adamw_update(
+            grads, state["opt"], state["params"], oc)
+        m = {"loss": loss, **metrics, **opt_metrics}
+        return {"params": params, "opt": opt}, m
+
+    return train_step
+
+
+def init_train_state(cfg: ModelConfig, oc: OptConfig, key):
+    params = tfm.init_params(cfg, key)
+    return {"params": params, "opt": init_opt_state(params, oc)}
+
+
+def train_state_shape(cfg: ModelConfig, oc: OptConfig):
+    """ShapeDtypeStruct pytree of the train state (no allocation)."""
+    return jax.eval_shape(
+        partial(init_train_state, cfg, oc), jax.random.key(0))

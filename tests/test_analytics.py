@@ -1,0 +1,46 @@
+"""Order-statistics theory + Monte-Carlo agreement (paper §4.2.1 equation)."""
+import numpy as np
+import pytest
+
+from repro.core import analytics as A
+
+
+def test_harmonic_and_order_stats():
+    assert A.e_min_exp(2) == pytest.approx(0.5)
+    assert A.e_max_exp(2) == pytest.approx(1.5)
+    assert A.e_max_exp(4) == pytest.approx(1 + 0.5 + 1 / 3 + 0.25)
+
+
+def test_paper_headline_ratio():
+    # 2 * E[min(Z1,Z2)] / E[max(Z1,Z2)] = 2/3
+    assert A.response_ratio_paper() == pytest.approx(2 / 3, abs=1e-9)
+
+
+def test_failure_curves():
+    assert A.forkjoin_failure(0.1, 4) == pytest.approx(1 - 0.9 ** 4)
+    assert A.raptor_failure(0.1, 4) == pytest.approx(1e-4)
+    # raptor failure falls with N; fork-join rises with N (Figure 8)
+    for p in (0.05, 0.2):
+        rf = [A.raptor_failure(p, n) for n in range(1, 6)]
+        ff = [A.forkjoin_failure(p, n) for n in range(1, 6)]
+        assert all(a > b for a, b in zip(rf, rf[1:]))
+        assert all(a < b for a, b in zip(ff, ff[1:]))
+
+
+def test_mc_racing_matches_2emin():
+    """Racing flight (non-rotated): T = sum of per-task min order stats."""
+    s = A.mc_flight_time(2, 2, n_samples=200_000, rotated=False)
+    assert s["mean"] == pytest.approx(1.0, rel=0.02)     # 2 * 1/2
+
+
+def test_mc_rotated_matches_racing_for_2x2():
+    """With preemption, rotated sequences achieve the same 2*E[min] as pure
+    racing for the 2-task/2-member case — cross-coverage preempts exactly
+    like direct racing, so the paper's eqn applies to its mechanism."""
+    s = A.mc_flight_time(2, 2, n_samples=20_000, rotated=True)
+    assert s["mean"] == pytest.approx(1.0, abs=0.08)
+
+
+def test_mc_rotated_beats_forkjoin_for_4x4():
+    s = A.mc_flight_time(4, 4, n_samples=4_000, rotated=True)
+    assert s["mean"] < A.e_max_exp(4)   # 2.083

@@ -1,0 +1,123 @@
+"""Threaded Raptor engine tests: speculation, preemption, fault tolerance,
+elastic flights (paper §3.2-§3.3)."""
+import threading
+import time
+
+import pytest
+
+from repro.core.manifest import ActionManifest, FunctionSpec, parallel, sequential
+from repro.core.scheduler import Flight, RaptorScheduler
+
+
+def sleepy(duration, value=None, fail=False):
+    def fn(ctx):
+        ctx.sleep(duration)
+        if fail:
+            raise RuntimeError("injected failure")
+        return value if value is not None else ctx.task_name
+    return fn
+
+
+def test_flight_completes_all_outputs():
+    man = parallel([("a", sleepy(0.02)), ("b", sleepy(0.02))], concurrency=2)
+    rep = Flight(man).run(timeout=10)
+    assert rep.ok
+    assert set(rep.outputs) == {"a", "b"}
+
+
+def test_preemption_saves_work():
+    """One slow, one fast member racing the same tasks: the slow copy must
+    be preempted, so total busy time << 2x serial time."""
+    ev = threading.Event()
+
+    def fast(ctx):
+        ctx.sleep(0.01)
+        return "fast"
+
+    def slow(ctx):
+        ctx.sleep(2.0)          # would dominate busy time if not preempted
+        return "slow"
+
+    calls = {"n": 0}
+    lock = threading.Lock()
+
+    def task(ctx):
+        with lock:
+            calls["n"] += 1
+            mine = calls["n"]
+        # first claimant is slow, second fast -> fast one wins, slow preempted
+        if mine == 1:
+            return slow(ctx)
+        return fast(ctx)
+
+    man = ActionManifest((FunctionSpec("t", task),), concurrency=2)
+    t0 = time.monotonic()
+    rep = Flight(man).run(timeout=10)
+    elapsed = time.monotonic() - t0
+    assert rep.ok
+    assert elapsed < 1.0, "flight should finish at the FAST copy's time"
+    assert rep.total_busy < 1.5, "slow copy must have been preempted"
+    preempted = sum(len(e.preempted) for e in rep.executors)
+    assert preempted >= 1
+
+
+def test_flight_survives_member_failure():
+    """p^N semantics: one member fails, the flight still succeeds."""
+    state = {"n": 0}
+    lock = threading.Lock()
+
+    def flaky(ctx):
+        with lock:
+            state["n"] += 1
+            mine = state["n"]
+        if mine == 1:
+            raise RuntimeError("member crash")
+        ctx.sleep(0.01)
+        return "ok"
+
+    man = ActionManifest((FunctionSpec("t", flaky),), concurrency=2)
+    rep = Flight(man).run(timeout=10)
+    assert rep.ok
+    assert rep.outputs["t"] == "ok"
+    failed = sum(len(e.failed) for e in rep.executors)
+    assert failed == 1
+
+
+def test_flight_fails_when_all_members_fail():
+    man = ActionManifest(
+        (FunctionSpec("t", sleepy(0.01, fail=True)),), concurrency=2)
+    rep = Flight(man).run(timeout=1.0)
+    assert not rep.ok
+
+
+def test_elastic_reduced_flight():
+    """Paper §3.3.2: fewer available executors -> smaller flight, still ok."""
+    man = parallel([("a", sleepy(0.01)), ("b", sleepy(0.01))], concurrency=4)
+    rep = Flight(man, size=1).run(timeout=10)
+    assert rep.ok
+    assert len(rep.executors) == 1
+
+
+def test_dag_dataflow_through_stream():
+    """Outputs flow between chained functions via the state stream."""
+    def add_one(ctx):
+        ctx.sleep(0.005)
+        base = ctx.inputs.get("first", 0)
+        return base + 1
+
+    def first(ctx):
+        ctx.sleep(0.005)
+        return 41
+
+    man = sequential([("first", first), ("second", add_one)], concurrency=2)
+    rep = Flight(man).run(timeout=10)
+    assert rep.ok
+    assert rep.outputs["second"] == 42
+
+
+def test_scheduler_bounded_pool():
+    sched = RaptorScheduler(num_workers=2)
+    man = parallel([("a", sleepy(0.01)), ("b", sleepy(0.01))], concurrency=4)
+    rep = sched.invoke(man, timeout=10)
+    assert rep.ok
+    assert len(rep.executors) <= 2     # pool-limited elastic flight

@@ -1,0 +1,73 @@
+"""Simulator reproduction of the paper's quantitative claims (Tables 6-7,
+Figures 6-8).  Tolerances are wide enough for short sim runs but tight
+enough to catch regressions in the mechanisms."""
+import numpy as np
+import pytest
+
+from repro.sim.experiments import (fig6_scale_effect, fig7_other_workloads,
+                                   fig8_reliability, table6_overhead,
+                                   table7_keygen)
+
+DUR = 600.0   # shorter than the paper's 30 min; stats are stable enough
+
+
+@pytest.fixture(scope="module")
+def keygen():
+    return table7_keygen(duration_s=DUR)
+
+
+def test_table6_overhead_matches():
+    rows = table6_overhead(n=20000)
+    assert rows["three_az/medium"]["median"] == pytest.approx(9.0, rel=0.15)
+    assert rows["three_az/medium"]["p90"] == pytest.approx(16.0, rel=0.25)
+    assert rows["one_az/low"]["median"] == pytest.approx(6.0, rel=0.2)
+    # HA deployment costs ~2ms extra median overhead (paper Fig 5a)
+    assert (rows["three_az/medium"]["median"]
+            > rows["one_az/medium"]["median"])
+
+
+def test_table7_keygen_stock_calibration(keygen):
+    s = keygen["stock"]
+    assert s["mean"] == pytest.approx(1335, rel=0.15)
+    assert s["median"] == pytest.approx(939, rel=0.15)
+    assert s["p90"] == pytest.approx(2887, rel=0.2)
+
+
+def test_table7_keygen_raptor_prediction(keygen):
+    r = keygen["raptor"]
+    assert r["mean"] == pytest.approx(864, rel=0.15)
+    # the headline: mean ratio ~ 2E[min]/E[max] ~ 0.647-0.667
+    assert keygen["mean_ratio"] == pytest.approx(0.65, abs=0.06)
+
+
+def test_fig6_scale_effect():
+    """No benefit at 1-AZ/5-worker scale; full benefit at 3-AZ/15."""
+    out = fig6_scale_effect(duration_s=DUR)
+    small = out["one_az_5w/medium"]["mean_ratio"]
+    large = out["three_az_15w/medium"]["mean_ratio"]
+    assert small > 0.90, f"small scale should show ~no benefit, got {small}"
+    assert large < 0.75, f"HA scale should show ~2/3 ratio, got {large}"
+    assert large < small
+
+
+def test_fig7_wordcount_and_thumbnail():
+    out = fig7_other_workloads(duration_s=DUR)
+    wc = out["wordcount"]["mean_ratio"]
+    th = out["thumbnail"]["mean_ratio"]
+    assert wc < 0.60, f"wordcount should be >40% faster, got {wc}"
+    assert 0.85 < th < 1.02, f"thumbnail muted-but-positive, got {th}"
+
+
+def test_fig8_reliability():
+    out = fig8_reliability(n_jobs_s=400.0)
+    for key, row in out.items():
+        # simulated failure rates within a few points of theory; the raptor
+        # side matches the EXACT 1-(1-p^N)^N job expression (the paper's
+        # p^N is its per-task simplification)
+        assert row["stock_fail"] == pytest.approx(
+            row["theory_stock"], abs=0.08), key
+        assert row["raptor_fail"] == pytest.approx(
+            row["theory_raptor_exact"], abs=0.04), key
+    # the crossover claim: raptor failure falls with N, stock rises
+    assert out["n8/p0.2"]["raptor_fail"] < out["n2/p0.2"]["raptor_fail"] + 1e-9
+    assert out["n8/p0.2"]["stock_fail"] > out["n2/p0.2"]["stock_fail"] - 1e-9
