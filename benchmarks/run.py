@@ -81,6 +81,60 @@ def bench_fig8_reliability(dur):
          f"_raptor={r['raptor_fail']:.4f}(exact={r['theory_raptor_exact']:.4f})")
 
 
+def bench_sim_vector(trials: int = 10000):
+    """Vectorized MC flight sim vs the scalar event-driven FlightSim.
+
+    Both simulate the Table-7 keygen Raptor configuration; the metric is
+    trials/sec (one trial = one flight invocation).  Results land in
+    BENCH_sim.json next to this file's parent so regressions are diffable.
+    """
+    from repro.sim.cluster import Cluster
+    from repro.sim.experiments import HA, rate_for
+    from repro.sim.flights import FlightSim
+    from repro.sim.vector import VectorFlightSim, keygen_vector
+    from repro.sim.workloads import keygen_workload
+
+    # scalar baseline: event loop at medium load, long enough for a stable
+    # wall-clock rate (the 10k-trial sweep itself would take minutes)
+    wl = keygen_workload()
+    sim = FlightSim(Cluster(seed=0, **HA), wl, raptor=True,
+                    arrival_rate_hz=rate_for(wl, HA, "medium"),
+                    duration_s=900.0, load="medium", seed=0)
+    t0 = time.time()
+    jobs = sim.run()
+    scalar_s = time.time() - t0
+    scalar_tps = len(jobs) / scalar_s
+
+    vec = VectorFlightSim(keygen_vector(), num_azs=3, flight=2, seed=0)
+    t0 = time.time()
+    vec.run(trials, raptor=True).response_ms.block_until_ready()
+    compile_s = time.time() - t0
+    t0 = time.time()
+    reps = 5
+    for _ in range(reps):
+        res = vec.run(trials, raptor=True)
+        res.response_ms.block_until_ready()
+    vector_s = (time.time() - t0) / reps
+    vector_tps = trials / vector_s
+    speedup = vector_tps / scalar_tps
+
+    record = {
+        "trials": trials,
+        "scalar": {"jobs": len(jobs), "wall_s": scalar_s,
+                   "trials_per_s": scalar_tps},
+        "vector": {"wall_s": vector_s, "compile_s": compile_s,
+                   "trials_per_s": vector_tps,
+                   "mean_ms": res.summary()["mean"]},
+        "speedup": speedup,
+    }
+    path = os.path.join(os.path.dirname(__file__), "..", "BENCH_sim.json")
+    with open(os.path.abspath(path), "w") as f:
+        json.dump(record, f, indent=2)
+    _row("sim_vector", vector_s * 1e6 / trials,
+         f"scalar={scalar_tps:.0f}t/s_vector={vector_tps:.0f}t/s"
+         f"_speedup={speedup:.0f}x_target>=50x")
+
+
 def bench_engine_speculation():
     """Live threaded engine: speculative flight on real jitted stages."""
     import jax
@@ -143,20 +197,38 @@ def bench_roofline():
 
 def main() -> None:
     ap = argparse.ArgumentParser()
+    ap.add_argument("targets", nargs="*",
+                    help="subset of benches to run (e.g. sim-vector); "
+                         "empty = the full paper sweep")
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--skip-engine", action="store_true")
+    ap.add_argument("--trials", type=int, default=10000,
+                    help="vector-sim trial count for sim-vector")
     args, _ = ap.parse_known_args()
     dur = 200.0 if args.fast else 600.0
     print("name,us_per_call,derived")
-    bench_table6_overhead()
-    bench_table7_keygen(dur)
-    bench_fig6_scale(dur)
-    bench_fig7_workloads(dur)
-    bench_fig8_reliability(min(dur, 400.0))
-    if not args.skip_engine:
-        bench_engine_speculation()
-        bench_kernels()
-    bench_roofline()
+    # single registry: insertion order is the full-sweep order; targets in
+    # JAX_TIER need jax and are dropped by --skip-engine so the scalar
+    # numpy-only sweep keeps working on a bare interpreter
+    named = {
+        "table6": bench_table6_overhead,
+        "table7": lambda: bench_table7_keygen(dur),
+        "fig6": lambda: bench_fig6_scale(dur),
+        "fig7": lambda: bench_fig7_workloads(dur),
+        "fig8": lambda: bench_fig8_reliability(min(dur, 400.0)),
+        "sim-vector": lambda: bench_sim_vector(args.trials),
+        "engine": bench_engine_speculation,
+        "kernels": bench_kernels,
+        "roofline": bench_roofline,
+    }
+    jax_tier = {"sim-vector", "engine", "kernels"}
+    targets = args.targets or [t for t in named
+                               if not (args.skip_engine and t in jax_tier)]
+    for t in targets:
+        if t not in named:
+            raise SystemExit(f"unknown bench target {t!r}; "
+                             f"choose from {sorted(named)}")
+        named[t]()
 
 
 if __name__ == "__main__":

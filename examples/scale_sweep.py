@@ -1,0 +1,48 @@
+"""Scale sweep: watch the paper's exponential-RV prediction emerge as the
+deployment spreads across availability zones.
+
+The paper's headline claim is that Raptor's mean-delay win is predicted by
+mutually independent exponential random variables — but only once the
+framework is horizontally scaled across AZs.  At 1 AZ every flight member
+shares the AZ's entropy-pool state (rho=0.95 of the service time), so
+racing replicas buys nothing; as AZs are added the members decorrelate and
+the measured ratio converges to the order-statistics prediction.
+
+Runs in seconds: every configuration is a vectorized on-device Monte-Carlo
+batch (sim/vector.py), not the scalar event loop.
+
+    PYTHONPATH=src python examples/scale_sweep.py
+"""
+from repro.core.analytics import raptor_speedup_prediction
+from repro.sim.vector import (VectorFlightSim, exponential_vector,
+                              keygen_vector)
+
+TRIALS = 40_000
+FLIGHT = 4
+
+
+def main():
+    theory = raptor_speedup_prediction(num_tasks=2, flight=FLIGHT)
+    print(f"exp(1) tasks, flight of {FLIGHT}, rho=0.95, {TRIALS} trials/point")
+    print(f"independent-exponential prediction: ratio = {theory:.3f}\n")
+    print(f"{'AZs':>4} {'stock mean':>11} {'raptor mean':>12} "
+          f"{'ratio':>7} {'gap to theory':>14}")
+    for num_azs in (1, 2, 3, 4, 6, 8):
+        sim = VectorFlightSim(exponential_vector(2, 1000.0),
+                              num_azs=num_azs, flight=FLIGHT, rho=0.95,
+                              seed=0)
+        pair = sim.run_pair(TRIALS)
+        ratio = pair["mean_ratio"]
+        print(f"{num_azs:>4} {pair['stock']['mean']:>9.0f}ms "
+              f"{pair['raptor']['mean']:>10.0f}ms {ratio:>7.3f} "
+              f"{ratio - theory:>+13.3f}")
+
+    print("\npaper deployment (ssh-keygen, flight of 2, 3 AZs):")
+    pair = VectorFlightSim(keygen_vector(), num_azs=3, flight=2,
+                           seed=0).run_pair(TRIALS)
+    print(f"  measured ratio {pair['mean_ratio']:.3f}  "
+          f"(paper 0.647, theory {raptor_speedup_prediction(2, 2):.3f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -67,6 +67,72 @@ def response_ratio_paper() -> float:
 
 
 # --------------------------------------------------------------------------
+# on-device (JAX) batched reductions — used by sim/vector.py
+# --------------------------------------------------------------------------
+# jax is imported lazily so the scalar simulator keeps working on a bare
+# numpy-only interpreter; every function here accepts/returns jnp arrays and
+# is safe to call under jit/vmap.
+
+def summarize_batch(samples):
+    """On-device analogue of :func:`summarize` over a 1-D sample batch.
+
+    Returns a dict of 0-d jnp arrays (floats once pulled off device), so a
+    jitted sweep can compute every table statistic without a host round-trip.
+    """
+    import jax.numpy as jnp
+    a = jnp.asarray(samples)
+    if not jnp.issubdtype(a.dtype, jnp.floating):
+        a = a.astype(jnp.float32)
+    mean = jnp.mean(a)
+    return {
+        "mean": mean,
+        "median": jnp.percentile(a, 50.0),
+        "p90": jnp.percentile(a, 90.0),
+        "p99": jnp.percentile(a, 99.0),
+        "scv": jnp.var(a) / (mean * mean + 1e-12),
+        "n": a.size,
+    }
+
+
+def emp_min_mean(z, axis: int = -1):
+    """E[min] estimate: mean over the batch of the min over ``axis``."""
+    import jax.numpy as jnp
+    return jnp.mean(jnp.min(jnp.asarray(z), axis=axis))
+
+
+def emp_max_mean(z, axis: int = -1):
+    """E[max] estimate: mean over the batch of the max over ``axis``."""
+    import jax.numpy as jnp
+    return jnp.mean(jnp.max(jnp.asarray(z), axis=axis))
+
+
+def flight_fail_rate_batch(fail):
+    """Job failure rate from a (trials, flight, tasks) attempt-error tensor.
+
+    A task is lost only when every flight member's attempt errors (§3.3.4
+    error-broadcast semantics); the job fails if any task is lost — the
+    empirical counterpart of :func:`raptor_failure_exact`.
+    """
+    import jax.numpy as jnp
+    f = jnp.asarray(fail, dtype=bool)
+    task_lost = jnp.all(f, axis=1)          # (trials, tasks)
+    return jnp.mean(jnp.any(task_lost, axis=-1))
+
+
+def forkjoin_fail_rate_batch(fail):
+    """Stock fork-join failure rate from a (trials, tasks) error tensor:
+    the job fails when any of its single-attempt tasks errors."""
+    import jax.numpy as jnp
+    return jnp.mean(jnp.any(jnp.asarray(fail, dtype=bool), axis=-1))
+
+
+def response_ratio_batch(t_raptor, t_stock):
+    """Mean-response ratio E[T_Raptor]/E[T_stock] from two sample batches."""
+    import jax.numpy as jnp
+    return jnp.mean(jnp.asarray(t_raptor)) / jnp.mean(jnp.asarray(t_stock))
+
+
+# --------------------------------------------------------------------------
 # empirical helpers
 # --------------------------------------------------------------------------
 

@@ -46,6 +46,7 @@ class StateStream:
     def __init__(self, latency: float = 0.0):
         self._lock = threading.Lock()
         self._results: Dict[str, TaskResult] = {}
+        self._errors: Dict[str, set] = {}
         self._event = threading.Condition(self._lock)
         self.latency = latency
         self.duplicates = 0
@@ -54,14 +55,25 @@ class StateStream:
         """Returns True if this was the winning (first) result."""
         with self._lock:
             cur = self._results.get(res.name)
+            if res.error is not None:
+                # errors never overwrite a success, but every one is counted
+                # per distinct executor so waiters can detect a dead task
+                self._errors.setdefault(res.name, set()).add(res.executor)
+                if cur is None:
+                    self._results[res.name] = res
+                self._event.notify_all()
+                return cur is None
             if cur is not None and cur.error is None:
                 self.duplicates += 1
                 return False
-            if cur is not None and res.error is not None:
-                return False
             self._results[res.name] = res
             self._event.notify_all()
-            return cur is None or res.error is None
+            return True
+
+    def error_count(self, name: str) -> int:
+        """Distinct executors whose attempt at ``name`` errored."""
+        with self._lock:
+            return len(self._errors.get(name, ()))
 
     def visible(self, name: str, now: Optional[float] = None) -> Optional[TaskResult]:
         """Result of ``name`` if its broadcast has been delivered."""
@@ -78,7 +90,13 @@ class StateStream:
         with self._lock:
             return {k: v for k, v in self._results.items() if v.error is None}
 
-    def wait_all(self, names, timeout: float) -> bool:
+    def wait_all(self, names, timeout: float,
+                 dead_after: Optional[int] = None) -> bool:
+        """Block until every name has an error-free result, the timeout
+        elapses, or — when ``dead_after`` is given — some task has errored
+        on ``dead_after`` distinct executors with no success (each member
+        attempts a task at most once, so the task can never complete and
+        the flight fails fast instead of burning the full timeout)."""
         deadline = time.monotonic() + timeout
         with self._lock:
             while True:
@@ -86,6 +104,14 @@ class StateStream:
                          for n in names)
                 if ok:
                     return True
+                if dead_after is not None:
+                    dead = any(
+                        len(self._errors.get(n, ())) >= dead_after
+                        and (n not in self._results
+                             or self._results[n].error is not None)
+                        for n in names)
+                    if dead:
+                        return False
                 rem = deadline - time.monotonic()
                 if rem <= 0:
                     return False
@@ -235,7 +261,8 @@ class Flight:
         self._executors = [_Executor(self, i) for i in range(self.size)]
         for ex in self._executors:
             ex.start()
-        ok = self.stream.wait_all(self.manifest.names, timeout)
+        ok = self.stream.wait_all(self.manifest.names, timeout,
+                                  dead_after=self.size)
         # flight complete: reclaim everything still running
         for ex in self._executors:
             ex.kill()

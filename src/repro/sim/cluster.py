@@ -22,6 +22,15 @@ from typing import Dict, List, Optional
 import numpy as np
 
 
+def lognormal_params(med: float, p90: float) -> tuple:
+    """(mu, sigma) of the lognormal with the given median and p90 — shared
+    by the scalar OverheadModel and the vectorized sim so the Table-6
+    parameterization cannot silently diverge between the two."""
+    mu = float(np.log(med))
+    sigma = max((float(np.log(p90)) - mu) / 1.2816, 0.05)
+    return mu, sigma
+
+
 @dataclasses.dataclass
 class OverheadModel:
     """Control-plane latency (paper Table 6) as a lognormal per (ha, load)."""
@@ -33,9 +42,7 @@ class OverheadModel:
     }
 
     def sample(self, rng, ha: bool, load: str, n: int = 1) -> np.ndarray:
-        med, p90 = self.TABLE[(ha, load)]
-        mu = np.log(med)
-        sigma = max((np.log(p90) - mu) / 1.2816, 0.05)
+        mu, sigma = lognormal_params(*self.TABLE[(ha, load)])
         return np.exp(rng.normal(mu, sigma, size=n))
 
 

@@ -101,6 +101,72 @@ def fig7_other_workloads(seed: int = 0, duration_s: float = 1800.0) -> Dict:
     }
 
 
+def sweep_scale(trials: int = 20000, seed: int = 0) -> Dict:
+    """Vectorized Monte-Carlo sweep across cluster scale (the tentpole).
+
+    Covers the scalar drivers' Table 7/8 territory and extends it with the
+    curves the scalar sim is too slow to produce: Raptor's mean-delay ratio
+    as the deployment grows 1→8 AZs and flights grow 2→16 members.  All
+    trials and order-statistics reductions run on-device (sim/vector.py +
+    core/analytics.py); the scalar FlightSim remains the agreement oracle.
+    """
+    from repro.core.analytics import raptor_speedup_prediction
+    from repro.sim.vector import (VectorFlightSim, exponential_vector,
+                                  keygen_vector, reliability_vector)
+    out: Dict[str, dict] = {}
+
+    # Table 7: keygen on the HA deployment (open-loop limit) + theory
+    sim = VectorFlightSim(keygen_vector(), num_azs=3, flight=2, seed=seed)
+    out["table7_keygen"] = sim.run_pair(trials)
+    out["table7_keygen"]["theory_ratio"] = response_ratio_paper()
+
+    # Table 8: the keygen ratio across the three Table-6 overhead regimes
+    for load in ("low", "medium", "high"):
+        s = VectorFlightSim(keygen_vector(), num_azs=3, flight=2, load=load,
+                            seed=seed)
+        out[f"table8/{load}"] = s.run_pair(trials)
+
+    # AZ sweep 1→8: a flight of 4 at rho=0.95 — replicas decorrelate as
+    # they spread, the paper's "only at horizontal scale" effect
+    az_curve = {}
+    for num_azs in (1, 2, 3, 4, 6, 8):
+        s = VectorFlightSim(exponential_vector(2, 1000.0), num_azs=num_azs,
+                            flight=4, rho=0.95, seed=seed)
+        az_curve[num_azs] = s.run_pair(trials)["mean_ratio"]
+    out["az_sweep"] = {
+        "ratio_by_azs": az_curve,
+        "theory_independent": raptor_speedup_prediction(num_tasks=2,
+                                                        flight=4),
+    }
+
+    # flight-size sweep 2→16 at full independence (8 AZs, exp tasks):
+    # the mutually-independent-exponential prediction, order stat by
+    # order stat
+    fl_curve = {}
+    for flight in (2, 4, 8, 16):
+        s = VectorFlightSim(exponential_vector(2, 1000.0), num_azs=8,
+                            flight=flight, rho=0.95, seed=seed)
+        fl_curve[flight] = {
+            "mean_ratio": s.run_pair(trials)["mean_ratio"],
+            "theory": raptor_speedup_prediction(num_tasks=2, flight=flight),
+        }
+    out["flight_sweep"] = fl_curve
+
+    # Figure 8 at vector scale: empirical flight failure vs the exact form
+    rel = {}
+    for n_tasks in (2, 4, 8):
+        for p in (0.1, 0.2, 0.3):
+            s = VectorFlightSim(reliability_vector(n_tasks, p), num_azs=3,
+                                flight=n_tasks, seed=seed)
+            r = s.run(trials, raptor=True)
+            rel[f"n{n_tasks}/p{p}"] = {
+                "raptor_fail": r.fail_rate(),
+                "theory_exact": raptor_failure_exact(p, n_tasks),
+            }
+    out["reliability"] = rel
+    return out
+
+
 def fig8_reliability(seed: int = 0, n_jobs_s: float = 600.0) -> Dict:
     """Job vs task failure probability, N parallel tasks."""
     out = {}

@@ -1,0 +1,308 @@
+"""JAX-vectorized Monte-Carlo flight simulator: thousands of independent
+invocations of the AZ-correlated service-time model at once.
+
+The scalar :class:`repro.sim.flights.FlightSim` is an event-driven queueing
+simulator — faithful, but minutes per configuration.  This module draws the
+paper's correlation model (``Z = rho*S + (1-rho)*X``, S shared per AZ — see
+``sim/cluster.py``) for a whole batch of trials as dense tensors and replays
+each flight's race with a fixed-trip ``lax.scan`` under ``vmap``, so a
+(flight size × AZ count × rho × load) sweep runs on-device in milliseconds.
+
+Scope: open-loop, independent-task manifests (ssh-keygen, the Figure-8
+reliability probes) — one trial is one invocation on an otherwise idle
+cluster, i.e. the zero-queueing limit of the scalar sim.  The scalar sim
+remains the oracle: ``tests/test_sim_vector.py`` checks seeded agreement on
+mean response and failure rate at low utilisation.
+
+Flight semantics mirror the scalar sim exactly (paper §3.3.3–§3.3.4):
+
+* member ``m`` runs the task list cyclically shifted by ``m % num_tasks``;
+* the first error-free completion of a task is broadcast, peers running it
+  are preempted and restart after the half-RTT stream latency;
+* a failed attempt is ignored by peers — the member simply moves on, and
+  each member attempts a task at most once;
+* the job fails only when every member has exhausted its sequence with some
+  task still incomplete (``raptor_failure_exact``'s 1-(1-p^F)^K).
+
+Stock (fork-join OpenWhisk) trials are closed-form on-device: one arrival
+overhead plus the max of per-task independent service draws.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core.analytics import (flight_fail_rate_batch,
+                                  forkjoin_fail_rate_batch,
+                                  response_ratio_batch, summarize_batch)
+from repro.sim.cluster import OverheadModel, lognormal_params
+from repro.sim.workloads import (KEYGEN_CV, KEYGEN_MEAN_MS, KEYGEN_OFFSET_MS,
+                                 RELIABILITY_CV, RELIABILITY_MEAN_MS)
+
+
+@dataclasses.dataclass(frozen=True)
+class VectorWorkload:
+    """Service-time model of one independent-task manifest (vector form)."""
+    name: str
+    num_tasks: int
+    mean_ms: float
+    offset_ms: float = 0.0
+    dist: str = "exp"              # "exp" | "lognorm"
+    cv: float = 1.0
+    fail_prob: float = 0.0
+    stage_overhead_ms: float = 0.5   # raptor stream hop per attempt
+
+
+def keygen_vector(fail_prob: float = 0.0) -> VectorWorkload:
+    """ssh-keygen: two entropy-bound tasks, flight of 2 (Tables 7/8)."""
+    return VectorWorkload("ssh-keygen", 2, KEYGEN_MEAN_MS, KEYGEN_OFFSET_MS,
+                          "lognorm", KEYGEN_CV, fail_prob)
+
+
+def exponential_vector(num_tasks: int = 2, mean_ms: float = 1000.0,
+                       fail_prob: float = 0.0) -> VectorWorkload:
+    """Pure exp(mu) tasks — the §4.2.1 theory's exact hypothesis, used to
+    show the mutually-independent-exponential prediction emerge with scale."""
+    return VectorWorkload(f"exp{num_tasks}", num_tasks, mean_ms, 0.0, "exp",
+                          1.0, fail_prob)
+
+
+def reliability_vector(n_tasks: int, fail_prob: float) -> VectorWorkload:
+    """Figure 8's N parallel ~100ms busy-waits with injected task errors."""
+    return VectorWorkload(f"busy{n_tasks}", n_tasks, RELIABILITY_MEAN_MS,
+                          0.0, "lognorm", RELIABILITY_CV, fail_prob)
+
+
+# --------------------------------------------------------------------------
+# on-device draw primitives
+# --------------------------------------------------------------------------
+
+def _service_draws(key, shape, mean, dist: str, cv):
+    if dist == "exp":
+        return mean * jax.random.exponential(key, shape)
+    sigma2 = jnp.log1p(cv * cv)
+    mu = jnp.log(mean) - sigma2 / 2
+    return jnp.exp(mu + jnp.sqrt(sigma2) * jax.random.normal(key, shape))
+
+
+def _overhead_draws(key, shape, med, p90):
+    mu, sigma = lognormal_params(med, p90)    # med/p90 are static (Table 6)
+    return jnp.exp(mu + sigma * jax.random.normal(key, shape))
+
+
+# --------------------------------------------------------------------------
+# one flight trial: fixed-trip event scan (vmapped over the batch)
+# --------------------------------------------------------------------------
+
+def _flight_trial(z_seq, fail_seq, t_join, seq, slat):
+    """Replay one flight race.
+
+    Everything per-member is laid out in that member's *sequence order* so
+    the scan body is pure one-hot arithmetic — per-trial dynamic gathers
+    and scatters cripple the vmapped loop on the CPU backend.
+
+    z_seq:    (F, K) attempt durations, z_seq[m, j] for task seq[m, j]
+    fail_seq: (F, K) attempt-error indicators, same layout
+    t_join:   (F,)   member join times (arrival control-plane overhead)
+    seq:      (F, K) member task orders (constant cyclic shifts)
+    Returns (response_time, ok).
+    """
+    F, K = z_seq.shape
+    k_arange = jnp.arange(K)
+    done0 = jnp.zeros(K, dtype=bool)
+    attempted0 = jnp.zeros((F, K), dtype=bool).at[:, 0].set(True)
+    cur0 = seq[:, 0]                      # current task id per member
+    curfail0 = fail_seq[:, 0]             # whether that attempt will error
+    fin0 = t_join + z_seq[:, 0]
+
+    def step(carry, _):
+        done, attempted, cur, curfail, fin, finished, ok, t_resp = carry
+        active = ~jnp.isinf(fin)
+        t = jnp.min(fin)                  # earliest finishing attempt
+        e_hot = jnp.arange(F) == jnp.argmin(fin)
+        task = jnp.sum(jnp.where(e_hot, cur, 0))
+        succ = ~jnp.any(curfail & e_hot)
+        done2 = done | ((k_arange == task) & succ)
+        complete = jnp.all(done2)
+        # the finisher always advances; on success, peers mid-`task` are
+        # preempted by the broadcast and advance after the stream half-RTT
+        preempted = succ & (cur == task) & active & ~e_hot
+        adv = e_hot | preempted
+        # next task per member: first in its shifted order that is neither
+        # broadcast-complete nor already attempted by this member
+        cand = (~done2[seq]) & (~attempted)
+        has_next = jnp.any(cand, axis=1)
+        j_hot = k_arange[None, :] == jnp.argmax(cand, axis=1)[:, None]
+        nxt = jnp.sum(jnp.where(j_hot, seq, 0), axis=1)
+        z_next = jnp.sum(jnp.where(j_hot, z_seq, 0.0), axis=1)
+        start = jnp.where(e_hot, t, t + slat)
+        fin2 = jnp.where(adv,
+                         jnp.where(has_next, start + z_next, jnp.inf),
+                         fin)
+        cur2 = jnp.where(adv, jnp.where(has_next, nxt, -1), cur)
+        curfail2 = jnp.where(adv,
+                             jnp.any(j_hot & fail_seq, axis=1) & has_next,
+                             curfail)
+        attempted2 = attempted | (j_hot & (adv & has_next)[:, None])
+        # terminal states: every task complete, or every member exhausted
+        all_idle = jnp.all(jnp.isinf(fin2))
+        terminal = (complete | all_idle) & ~finished
+        keep = lambda new, old: jnp.where(finished, old, new)
+        carry2 = (keep(done2, done), keep(attempted2, attempted),
+                  keep(cur2, cur), keep(curfail2, curfail), keep(fin2, fin),
+                  finished | terminal,
+                  jnp.where(terminal, complete, ok),
+                  jnp.where(terminal, t, t_resp))
+        return carry2, None
+
+    carry0 = (done0, attempted0, cur0, curfail0, fin0,
+              jnp.array(False), jnp.array(False), jnp.array(jnp.inf))
+    # unrolling removes the scan's per-step dispatch overhead — the hot
+    # path for small flights is a handful of steps (see BENCH_sim.json)
+    (_, _, _, _, _, finished, ok, t_resp), _ = lax.scan(
+        step, carry0, None, length=F * K, unroll=min(F * K, 8))
+    return t_resp, ok
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("trials", "flight", "num_tasks", "num_azs", "dist",
+                     "fail_prob", "oh_med", "oh_p90"))
+def _raptor_batch(key, *, trials, flight, num_tasks, num_azs, dist,
+                  rho, mean, offset, cv, fail_prob, stage_oh, slat,
+                  oh_med, oh_p90):
+    F, K, A = flight, num_tasks, num_azs
+    k_z, k_f, k_o = jax.random.split(key, 3)
+    az = jnp.arange(F) % A                        # HA spread placement
+    # one fused draw for the AZ-shared S block and the private X block —
+    # threefry invocations dominate the batch cost on CPU
+    sx = _service_draws(k_z, (trials, A + F, K), mean, dist, cv)
+    s, x = sx[:, :A, :], sx[:, A:, :]
+    z = rho * s[:, az, :] + (1 - rho) * x + offset + stage_oh
+    # fail_prob is static so the p=0 common case folds the whole failure
+    # path (and its uniform draw) out of the compiled scan
+    if fail_prob == 0.0:
+        fail = jnp.zeros((trials, F, K), dtype=bool)
+    else:
+        fail = jax.random.bernoulli(k_f, fail_prob, (trials, F, K))
+    oh = _overhead_draws(k_o, (trials, F + 1), oh_med, oh_p90)
+    oh0, ohm = oh[:, 0], oh[:, 1:]
+    # member 0 joins at the arrival overhead; later members pay a second
+    # control-plane hop (the fork's recursive invocation, §3.3.2)
+    t_join = oh0[:, None] + jnp.where(jnp.arange(F) == 0, 0.0, ohm)
+    seq = jnp.stack([jnp.roll(jnp.arange(K), -(m % K)) for m in range(F)])
+    # permute draws into sequence order once, outside the event scan
+    seq_b = jnp.broadcast_to(seq, (trials, F, K))
+    z_seq = jnp.take_along_axis(z, seq_b, axis=2)
+    fail_seq = jnp.take_along_axis(fail, seq_b, axis=2)
+    t_resp, ok = jax.vmap(
+        lambda zz, ff, tj: _flight_trial(zz, ff, tj, seq, slat))(
+            z_seq, fail_seq, t_join)
+    return t_resp, ok, fail
+
+
+@functools.partial(
+    jax.jit, static_argnames=("trials", "num_tasks", "dist", "fail_prob",
+                              "oh_med", "oh_p90"))
+def _stock_batch(key, *, trials, num_tasks, dist, mean, offset, cv,
+                 fail_prob, oh_med, oh_p90):
+    k_z, k_f, k_o = jax.random.split(key, 3)
+    z = _service_draws(k_z, (trials, num_tasks), mean, dist, cv) + offset
+    if fail_prob == 0.0:
+        fail = jnp.zeros((trials, num_tasks), dtype=bool)
+    else:
+        fail = jax.random.bernoulli(k_f, fail_prob, (trials, num_tasks))
+    oh = _overhead_draws(k_o, (trials,), oh_med, oh_p90)
+    t_resp = oh + jnp.max(z, axis=1)              # fork-join: wait for max
+    ok = ~jnp.any(fail, axis=1)
+    return t_resp, ok, fail
+
+
+# --------------------------------------------------------------------------
+# public driver
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class VectorResult:
+    response_ms: jnp.ndarray     # (trials,)
+    ok: jnp.ndarray              # (trials,) bool
+    fail_draws: jnp.ndarray      # raptor (trials,F,K) / stock (trials,K)
+    raptor: bool
+
+    @property
+    def trials(self) -> int:
+        return int(self.response_ms.shape[0])
+
+    def fail_rate(self) -> float:
+        return float(1.0 - jnp.mean(self.ok))
+
+    def theory_fail_rate(self) -> float:
+        """Failure rate recomputed from the raw error draws on-device —
+        cross-checks the event replay against the order-statistics form."""
+        if self.raptor:
+            return float(flight_fail_rate_batch(self.fail_draws))
+        return float(forkjoin_fail_rate_batch(self.fail_draws))
+
+    def summary(self) -> dict:
+        s = {k: (int(v) if k == "n" else float(v))
+             for k, v in summarize_batch(self.response_ms).items()}
+        s["fail_rate"] = self.fail_rate()
+        return s
+
+
+class VectorFlightSim:
+    """Batched Monte-Carlo of one (workload, deployment) configuration.
+
+    Deployment knobs mirror :class:`repro.sim.cluster.Cluster`: AZ count
+    (members are spread round-robin, the HA placement), correlation ``rho``,
+    and the Table-6 control-plane overhead regime per (ha, load).
+    """
+
+    def __init__(self, wl: VectorWorkload, *, num_azs: int = 3,
+                 flight: int = 2, rho: float = 0.95, load: str = "medium",
+                 stream_latency_ms: float = 0.5, seed: int = 0):
+        self.wl = wl
+        self.num_azs = int(num_azs)
+        self.flight = int(flight)
+        self.rho = float(rho)
+        self.load = load
+        self.slat = float(stream_latency_ms)
+        self.seed = int(seed)
+        ha = self.num_azs > 1
+        self.oh_med, self.oh_p90 = OverheadModel.TABLE[(ha, load)]
+
+    def _key(self, raptor: bool):
+        return jax.random.PRNGKey(self.seed * 2 + (1 if raptor else 0))
+
+    def run(self, trials: int = 10_000, *, raptor: bool = True) -> VectorResult:
+        wl = self.wl
+        if raptor:
+            t, ok, fail = _raptor_batch(
+                self._key(True), trials=int(trials), flight=self.flight,
+                num_tasks=wl.num_tasks, num_azs=self.num_azs, dist=wl.dist,
+                rho=self.rho, mean=wl.mean_ms, offset=wl.offset_ms,
+                cv=wl.cv, fail_prob=wl.fail_prob,
+                stage_oh=wl.stage_overhead_ms, slat=self.slat,
+                oh_med=self.oh_med, oh_p90=self.oh_p90)
+        else:
+            t, ok, fail = _stock_batch(
+                self._key(False), trials=int(trials),
+                num_tasks=wl.num_tasks, dist=wl.dist, mean=wl.mean_ms,
+                offset=wl.offset_ms, cv=wl.cv, fail_prob=wl.fail_prob,
+                oh_med=self.oh_med, oh_p90=self.oh_p90)
+        return VectorResult(t, ok, fail, raptor)
+
+    def run_pair(self, trials: int = 10_000) -> Dict[str, dict]:
+        """Stock + Raptor summaries and their mean ratio (Table-7 shape)."""
+        stock = self.run(trials, raptor=False)
+        rap = self.run(trials, raptor=True)
+        out = {"stock": stock.summary(), "raptor": rap.summary()}
+        out["mean_ratio"] = float(
+            response_ratio_batch(rap.response_ms, stock.response_ms))
+        return out

@@ -113,6 +113,9 @@ def thumbnail_workload() -> SimWorkload:
 
 
 # ---- reliability probe: N parallel 100ms busy-waits (Figure 8) ------------
+RELIABILITY_MEAN_MS = 100.0
+RELIABILITY_CV = 0.05
+
 
 def reliability_workload(n_tasks: int, fail_prob: float) -> SimWorkload:
     tasks = [f"busy{i}" for i in range(n_tasks)]
@@ -121,7 +124,8 @@ def reliability_workload(n_tasks: int, fail_prob: float) -> SimWorkload:
         tasks=tasks,
         deps={t: () for t in tasks},
         concurrency=n_tasks,
-        make_draws=lambda cl: cl.draws(100.0, 0.0, "lognorm", cv=0.05),
+        make_draws=lambda cl: cl.draws(RELIABILITY_MEAN_MS, 0.0, "lognorm",
+                                       cv=RELIABILITY_CV),
         fail_prob=fail_prob,
         work_est_ws=0.1 * n_tasks * 2,
     )

@@ -1,0 +1,63 @@
+"""Fallback stand-ins for ``hypothesis`` on bare environments.
+
+The property-based tests in this suite are a bonus tier: when the real
+``hypothesis`` package is installed they run as usual, and when it is not
+the suite must still *collect* (the seed environment ships without it).
+Importing modules do::
+
+    try:
+        import hypothesis
+        import hypothesis.strategies as st
+    except ModuleNotFoundError:
+        from _hypothesis_compat import hypothesis, st
+
+The stub keeps every module-level decorator expression valid —
+``@st.composite``, ``@hypothesis.given(...)``, ``@hypothesis.settings(...)``
+— while replacing each decorated test with a skip marker.
+"""
+import pytest
+
+_SKIP_REASON = "hypothesis not installed; property-based tier skipped"
+
+
+class _AnyStrategy:
+    """Permissive stand-in for strategy objects and combinators: every
+    attribute is callable and returns another ``_AnyStrategy``, so strategy
+    expressions evaluated at collection time never raise."""
+
+    def __call__(self, *args, **kwargs):
+        return _AnyStrategy()
+
+    def __getattr__(self, name):
+        return _AnyStrategy()
+
+
+class _StrategiesStub:
+    def __getattr__(self, name):
+        return _AnyStrategy()
+
+
+class _HypothesisStub:
+    strategies = _StrategiesStub()
+
+    @staticmethod
+    def given(*args, **kwargs):
+        def deco(fn):
+            return pytest.mark.skip(reason=_SKIP_REASON)(fn)
+        return deco
+
+    @staticmethod
+    def settings(*args, **kwargs):
+        return lambda fn: fn
+
+    @staticmethod
+    def assume(condition):
+        return True
+
+    @staticmethod
+    def note(value):
+        return None
+
+
+hypothesis = _HypothesisStub()
+st = _StrategiesStub()

@@ -1,8 +1,12 @@
 """DAG / execution-sequence tests, incl. exact reproduction of paper
 Tables 1+3 and property-based checks of sequence validity."""
-import hypothesis
-import hypothesis.strategies as st
 import pytest
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+except ModuleNotFoundError:  # bare env: property tests skip, rest still run
+    from _hypothesis_compat import hypothesis, st
 
 from repro.core.dag import (execution_sequence, ready_functions,
                             sequences_for_flight, validate_acyclic)

@@ -5,8 +5,10 @@ import time
 
 import pytest
 
-from repro.core.manifest import ActionManifest, FunctionSpec, parallel, sequential
-from repro.core.scheduler import Flight, RaptorScheduler
+from repro.core.manifest import (ActionManifest, ExecutionContext,
+                                 FunctionSpec, parallel, sequential)
+from repro.core.scheduler import (Flight, Preempted, RaptorScheduler,
+                                  StateStream, TaskContext, TaskResult)
 
 
 def sleepy(duration, value=None, fail=False):
@@ -88,6 +90,136 @@ def test_flight_fails_when_all_members_fail():
         (FunctionSpec("t", sleepy(0.01, fail=True)),), concurrency=2)
     rep = Flight(man).run(timeout=1.0)
     assert not rep.ok
+
+
+def test_flight_fails_fast_on_permanent_task_failure():
+    """Regression: a task that errors on EVERY member can never complete
+    (each member attempts it once), so the flight must fail as soon as the
+    last attempt errors — not hang until the full timeout."""
+    man = ActionManifest(
+        (FunctionSpec("t", sleepy(0.01, fail=True)),), concurrency=3)
+    t0 = time.monotonic()
+    rep = Flight(man).run(timeout=60.0)
+    elapsed = time.monotonic() - t0
+    assert not rep.ok
+    assert elapsed < 5.0, f"flight burned {elapsed:.1f}s of a 60s timeout"
+    assert sum(len(e.failed) for e in rep.executors) == 3
+
+
+def test_flight_fails_fast_mid_dag():
+    """A dead task in the middle of a DAG also fails fast: downstream
+    functions can never become runnable."""
+    man = ActionManifest((
+        FunctionSpec("ok_task", sleepy(0.01)),
+        FunctionSpec("dead", sleepy(0.01, fail=True),
+                     dependencies=("ok_task",)),
+        FunctionSpec("down", sleepy(0.01), dependencies=("dead",)),
+    ), concurrency=2)
+    t0 = time.monotonic()
+    rep = Flight(man).run(timeout=60.0)
+    elapsed = time.monotonic() - t0
+    assert not rep.ok
+    assert elapsed < 10.0
+    assert "ok_task" in rep.outputs
+
+
+# ------------------------------------------------------------------
+# StateStream semantics (paper §3.3.4)
+# ------------------------------------------------------------------
+
+def _res(name, value=None, error=None, executor=0, t=None):
+    return TaskResult(name, value, error,
+                      executor, time.monotonic() if t is None else t)
+
+
+def test_stream_first_result_wins():
+    st = StateStream()
+    assert st.publish(_res("t", value=1, executor=0)) is True
+    assert st.publish(_res("t", value=2, executor=1)) is False
+    assert st.completed()["t"].value == 1
+    assert st.duplicates == 1
+
+
+def test_stream_error_then_success_overwrites():
+    st = StateStream()
+    st.publish(_res("t", error=RuntimeError("boom"), executor=0))
+    assert st.visible("t") is None          # errors are never visible
+    assert st.publish(_res("t", value=7, executor=1)) is True
+    assert st.completed()["t"].value == 7
+    assert st.error_count("t") == 1
+
+
+def test_stream_success_then_error_is_ignored():
+    st = StateStream()
+    assert st.publish(_res("t", value=3, executor=0)) is True
+    st.publish(_res("t", error=RuntimeError("late crash"), executor=1))
+    assert st.completed()["t"].value == 3
+    # the late error is counted but cannot shadow the success
+    assert st.error_count("t") == 1
+    assert st.wait_all(["t"], timeout=0.1, dead_after=1) is True
+
+
+def test_stream_error_count_distinct_executors():
+    st = StateStream()
+    st.publish(_res("t", error=RuntimeError("a"), executor=0))
+    st.publish(_res("t", error=RuntimeError("b"), executor=0))   # same member
+    assert st.error_count("t") == 1
+    st.publish(_res("t", error=RuntimeError("c"), executor=1))
+    assert st.error_count("t") == 2
+
+
+def test_stream_wait_all_dead_task_returns_early():
+    st = StateStream()
+    st.publish(_res("t", error=RuntimeError("x"), executor=0))
+    st.publish(_res("t", error=RuntimeError("y"), executor=1))
+    t0 = time.monotonic()
+    assert st.wait_all(["t"], timeout=5.0, dead_after=2) is False
+    assert time.monotonic() - t0 < 1.0
+
+
+def test_stream_latency_gates_visibility():
+    st = StateStream(latency=10.0)
+    now = time.monotonic()
+    st.publish(_res("t", value=1, executor=0, t=now))
+    assert st.visible("t", now=now + 1.0) is None       # still in flight
+    assert st.visible("t", now=now + 10.5) is not None  # delivered
+
+
+# ------------------------------------------------------------------
+# TaskContext preemption granularity
+# ------------------------------------------------------------------
+
+def _ctx():
+    return TaskContext("m", "t", 0, ExecutionContext.fresh(), {})
+
+
+def test_sleep_preempted_within_slice_granularity():
+    """ctx.sleep polls the cancel token every slice: a preemption that
+    lands mid-sleep must interrupt within a few slices, not at the end."""
+    ctx = _ctx()
+    threading.Timer(0.03, ctx._cancel.set).start()
+    t0 = time.monotonic()
+    with pytest.raises(Preempted):
+        ctx.sleep(2.0, slice_s=0.002)
+    elapsed = time.monotonic() - t0
+    assert elapsed < 0.5, f"preemption took {elapsed:.3f}s, want ~0.03s"
+
+
+def test_sleep_completes_when_not_cancelled():
+    ctx = _ctx()
+    t0 = time.monotonic()
+    ctx.sleep(0.05)
+    assert 0.04 <= time.monotonic() - t0 < 0.5
+    ctx.checkpoint()                        # no cancel -> no raise
+
+
+def test_checkpoint_raises_after_cancel():
+    ctx = _ctx()
+    ctx._cancel.set()
+    with pytest.raises(Preempted):
+        ctx.checkpoint()
+    with pytest.raises(Preempted):
+        ctx.sleep(0.01)
 
 
 def test_elastic_reduced_flight():

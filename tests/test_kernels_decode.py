@@ -1,10 +1,14 @@
 """Decode-attention kernel vs oracle: GQA ratios, ring-cache masks, dtypes."""
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+except ModuleNotFoundError:  # bare env: property tests skip, rest still run
+    from _hypothesis_compat import hypothesis, st
 
 from repro.kernels.decode_attention.kernel import decode_attention
 from repro.kernels.decode_attention.ref import decode_attention_ref

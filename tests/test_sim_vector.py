@@ -1,0 +1,124 @@
+"""Vectorized MC flight sim vs the scalar event-driven oracle + theory.
+
+The scalar FlightSim is the trusted reproduction of the paper's tables; the
+vectorized sim must agree with it (open-loop limit: low utilisation) on
+mean response and failure rate, and must reproduce the order-statistics
+theory it exists to sweep.
+"""
+import numpy as np
+import pytest
+
+from repro.core import analytics as A
+from repro.sim.cluster import Cluster
+from repro.sim.experiments import HA, rate_for
+from repro.sim.flights import FlightSim
+from repro.sim.vector import (VectorFlightSim, exponential_vector,
+                              keygen_vector, reliability_vector)
+from repro.sim.workloads import keygen_workload, reliability_workload
+
+TRIALS = 40_000
+
+
+def scalar_run(wl_fn, *, raptor, seed, duration_s=1800.0):
+    wl = wl_fn()
+    sim = FlightSim(Cluster(seed=seed, **HA), wl, raptor=raptor,
+                    arrival_rate_hz=rate_for(wl, HA, "low"),
+                    duration_s=duration_s, load="low", seed=seed)
+    return sim.run()
+
+
+# ------------------------------------------------------------------
+# scalar/vector agreement (the satellite acceptance check)
+# ------------------------------------------------------------------
+
+def test_keygen_mean_agrees_with_scalar():
+    vec = VectorFlightSim(keygen_vector(), num_azs=3, flight=2, load="low",
+                          seed=0)
+    for raptor in (False, True):
+        jobs = scalar_run(keygen_workload, raptor=raptor, seed=3)
+        scalar_mean = float(np.mean([j.response for j in jobs]))
+        vec_mean = vec.run(TRIALS, raptor=raptor).summary()["mean"]
+        assert vec_mean == pytest.approx(scalar_mean, rel=0.08), (
+            f"raptor={raptor}: scalar {scalar_mean:.0f}ms "
+            f"vs vector {vec_mean:.0f}ms")
+
+
+def test_keygen_ratio_agrees_with_scalar_and_paper():
+    vec = VectorFlightSim(keygen_vector(), num_azs=3, flight=2, load="low",
+                          seed=0)
+    pair = vec.run_pair(TRIALS)
+    # paper Table 7 ratio 0.647, theory 2/3; open-loop sits just below
+    assert pair["mean_ratio"] == pytest.approx(0.647, abs=0.06)
+
+
+def test_fail_rate_agrees_with_scalar():
+    vec = VectorFlightSim(reliability_vector(2, 0.3), num_azs=3, flight=2,
+                          load="low", seed=0)
+    for raptor in (False, True):
+        jobs = scalar_run(lambda: reliability_workload(2, 0.3),
+                          raptor=raptor, seed=5, duration_s=900.0)
+        scalar_fail = float(np.mean([not j.ok for j in jobs]))
+        vec_fail = vec.run(TRIALS, raptor=raptor).fail_rate()
+        assert vec_fail == pytest.approx(scalar_fail, abs=0.03), (
+            f"raptor={raptor}: scalar {scalar_fail:.3f} "
+            f"vs vector {vec_fail:.3f}")
+
+
+# ------------------------------------------------------------------
+# order-statistics theory (on-device reductions)
+# ------------------------------------------------------------------
+
+def test_rho_zero_matches_exponential_prediction():
+    """Fully independent exp tasks: the §4.2.1 2*E[min]/E[max] ratio."""
+    sim = VectorFlightSim(exponential_vector(2, 1000.0), num_azs=3,
+                          flight=2, rho=0.0, stream_latency_ms=0.0, seed=0)
+    pair = sim.run_pair(TRIALS)
+    assert pair["mean_ratio"] == pytest.approx(A.response_ratio_paper(),
+                                               abs=0.05)
+
+
+def test_failure_matches_exact_form():
+    """Event replay and the closed-form 1-(1-p^F)^K must agree."""
+    for n_tasks, p in ((2, 0.3), (4, 0.2)):
+        sim = VectorFlightSim(reliability_vector(n_tasks, p), num_azs=3,
+                              flight=n_tasks, seed=0)
+        res = sim.run(TRIALS, raptor=True)
+        assert res.fail_rate() == pytest.approx(
+            A.raptor_failure_exact(p, n_tasks), abs=0.02)
+        # the on-device draw reduction must match the replay near-exactly:
+        # a job fails iff some task's every attempt errored
+        assert res.fail_rate() == pytest.approx(res.theory_fail_rate(),
+                                                abs=0.005)
+        stock = sim.run(TRIALS, raptor=False)
+        assert stock.fail_rate() == pytest.approx(
+            A.forkjoin_failure(p, n_tasks), abs=0.02)
+
+
+def test_scale_effect_monotone():
+    """1 AZ: correlated replicas, ~no win.  3+ AZs: the full E[min] win."""
+    ratios = {}
+    for num_azs in (1, 3):
+        sim = VectorFlightSim(keygen_vector(), num_azs=num_azs, flight=2,
+                              seed=0)
+        ratios[num_azs] = sim.run_pair(TRIALS)["mean_ratio"]
+    assert ratios[1] > 0.90, f"1-AZ should show ~no benefit: {ratios[1]}"
+    assert ratios[3] < 0.75, f"3-AZ should show the ~2/3 win: {ratios[3]}"
+
+
+def test_summarize_batch_matches_host():
+    rng = np.random.default_rng(0)
+    x = rng.exponential(100.0, size=5000)
+    host = A.summarize(x)
+    dev = {k: float(v) for k, v in A.summarize_batch(x).items()}
+    for key in ("mean", "median", "p90", "p99"):
+        assert dev[key] == pytest.approx(host[key], rel=2e-3), key
+    assert dev["scv"] == pytest.approx(host["scv"], rel=1e-2)
+
+
+def test_emp_order_stat_reductions():
+    rng = np.random.default_rng(1)
+    z = rng.exponential(1.0, size=(200_000, 4))
+    assert float(A.emp_min_mean(z)) == pytest.approx(A.e_min_exp(4),
+                                                     rel=0.02)
+    assert float(A.emp_max_mean(z)) == pytest.approx(A.e_max_exp(4),
+                                                     rel=0.02)
