@@ -1,0 +1,65 @@
+"""Gate on BENCH_sim.json throughput regressions.
+
+    python benchmarks/check_regression.py BASELINE.json MEASURED.json \
+        [--factor 5]
+
+Compares the vectorized-sim throughput numbers of a fresh benchmark run
+against the checked-in baseline and exits non-zero when any tracked metric
+regressed by more than ``factor`` (default 5x — wide enough to absorb
+runner-class differences between the laptop that recorded the baseline and
+a shared CI box, narrow enough to catch an accidental de-vectorization,
+which costs 50-150x).  Metrics missing from either file are skipped, so the
+gate tolerates schema growth in both directions.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# (path into the record, human label)
+TRACKED = [
+    (("vector", "trials_per_s"), "open-loop vector trials/s"),
+    (("queue", "jobs_per_s"), "closed-loop queue jobs/s"),
+    (("dag_wordcount", "jobs_per_s"), "wordcount DAG jobs/s"),
+    (("fig6_sweep", "vector_jobs_per_s"), "fig6 load-sweep jobs/s"),
+]
+
+
+def _get(record: dict, path):
+    for key in path:
+        if not isinstance(record, dict) or key not in record:
+            return None
+        record = record[key]
+    return record
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline")
+    ap.add_argument("measured")
+    ap.add_argument("--factor", type=float, default=5.0,
+                    help="fail when baseline/measured exceeds this")
+    args = ap.parse_args()
+    with open(args.baseline) as f:
+        base = json.load(f)
+    with open(args.measured) as f:
+        meas = json.load(f)
+
+    failed = False
+    for path, label in TRACKED:
+        b, m = _get(base, path), _get(meas, path)
+        if b is None or m is None:
+            print(f"skip  {label}: missing "
+                  f"({'baseline' if b is None else 'measured'})")
+            continue
+        ratio = b / m if m else float("inf")
+        status = "FAIL" if ratio > args.factor else "ok"
+        failed |= status == "FAIL"
+        print(f"{status:5s} {label}: baseline={b:.0f} measured={m:.0f} "
+              f"(slowdown {ratio:.2f}x, limit {args.factor:.1f}x)")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -43,6 +43,32 @@ def main():
     print(f"  measured ratio {pair['mean_ratio']:.3f}  "
           f"(paper 0.647, theory {raptor_speedup_prediction(2, 2):.3f})")
 
+    load_curve()
+
+
+def load_curve():
+    """Closed-loop load sweep (fig6's other axis): the ratio vs utilisation.
+
+    Arrival rate is a traced knob of the queue engine, so the whole curve
+    per deployment is one vmapped call — and it shows the regime the
+    open-loop batch cannot: at the 1-AZ/5-worker deployment a flight of 2
+    DOUBLES per-job worker demand, so Raptor actively hurts once the queue
+    bites (the paper's Kafka-queue-domination note, §4.2.1), while the HA
+    deployment keeps most of its win to moderate load.
+    """
+    from repro.sim.experiments import load_sweep_util
+    print("\nclosed-loop load sweep (ssh-keygen, ratio vs utilisation):")
+    res = load_sweep_util(utils=(0.15, 0.3, 0.45, 0.6, 0.75))
+    rows = {}
+    for key, pair in res.items():
+        dep, util = key.rsplit("/util", 1)
+        rows.setdefault(float(util), {})[dep] = pair["mean_ratio"]
+    print(f"{'util':>6} {'one_az_5w':>10} {'three_az_15w':>13}")
+    for util in sorted(rows):
+        r = rows[util]
+        print(f"{util:>6.2f} {r['one_az_5w']:>10.3f} "
+              f"{r['three_az_15w']:>13.3f}")
+
 
 if __name__ == "__main__":
     main()

@@ -1,0 +1,13 @@
+"""Pallas API compatibility across the jax versions this repo sees.
+
+The kernels target the current Pallas TPU API (``pltpu.CompilerParams``);
+older jax releases (<= 0.4.x) expose the same dataclass as
+``pltpu.TPUCompilerParams``.  Resolve once here so every kernel tier stays
+importable on both, instead of each kernel carrying its own getattr dance.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")

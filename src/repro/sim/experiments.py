@@ -10,18 +10,16 @@ from repro.core.analytics import (forkjoin_failure, raptor_failure,
                                   summarize)
 from repro.sim.cluster import Cluster
 from repro.sim.flights import FlightSim
-from repro.sim.workloads import (keygen_workload, reliability_workload,
-                                 thumbnail_workload, wordcount_workload)
+from repro.sim.workloads import (UTIL, arrival_rate_hz, keygen_workload,
+                                 reliability_workload, thumbnail_workload,
+                                 wordcount_workload)
 
 HA = dict(num_workers=15, num_azs=3)
 LOW_AVAIL = dict(num_workers=5, num_azs=1)
 
-# load levels as utilisation targets of the flight variant's capacity
-UTIL = {"low": 0.18, "medium": 0.45, "high": 0.75}
-
 
 def rate_for(wl, deployment: Dict, load: str) -> float:
-    return UTIL[load] * deployment["num_workers"] / wl.work_est_ws
+    return arrival_rate_hz(wl.work_est_ws, deployment["num_workers"], load)
 
 
 def run_pair(wl_fn, deployment: Dict, *, load: str = "medium",
@@ -67,13 +65,38 @@ def table7_keygen(seed: int = 0, duration_s: float = 1800.0) -> Dict:
     return res
 
 
-def fig6_scale_effect(seed: int = 0, duration_s: float = 1800.0) -> Dict:
+def fig6_scale_effect(seed: int = 0, duration_s: float = 1800.0,
+                      engine: str = "vector", jobs: int = None,
+                      trials: int = 32) -> Dict:
     """Raptor benefit vs deployment scale and load (the paper's headline).
 
     Low-availability 1-AZ/5-worker: replicas co-located -> correlated ->
     ~no benefit.  HA 3-AZ/15-worker: independent -> ~2/3 ratio.
+
+    ``engine="vector"`` (default) replays the closed-loop batched queue
+    engine (sim/vector_queue.py): both deployments x three loads in two
+    compilations, minutes -> sub-second warm.  One vector *trial* is one
+    ``duration_s``-long arrival stream (``jobs`` overrides the derived
+    per-trial stream length), so the scalar knob keeps meaning.
+    ``engine="scalar"`` runs the event-driven oracle the vector engine is
+    validated against (tests/test_sim_queue.py).
     """
     out = {}
+    if engine == "vector":
+        try:
+            from repro.sim.vector_queue import keygen_queue, load_sweep
+        except ImportError:       # numpy-only interpreter: scalar oracle
+            engine = "scalar"
+    if engine == "vector":
+        for name, dep in (("one_az_5w", LOW_AVAIL), ("three_az_15w", HA)):
+            n = jobs if jobs is not None else max(256, int(
+                rate_for(keygen_workload(), dep, "medium") * duration_s))
+            res = load_sweep(keygen_queue(), num_workers=dep["num_workers"],
+                             num_azs=dep["num_azs"], jobs=n,
+                             trials=trials, seed=seed)
+            for load, pair in res.items():
+                out[f"{name}/{load}"] = pair
+        return out
     for name, dep in (("one_az_5w", LOW_AVAIL), ("three_az_15w", HA)):
         for load in ("low", "medium", "high"):
             wl0 = keygen_workload()
@@ -84,21 +107,71 @@ def fig6_scale_effect(seed: int = 0, duration_s: float = 1800.0) -> Dict:
                 sim = FlightSim(cl, keygen_workload(), raptor=raptor,
                                 arrival_rate_hz=hz, duration_s=duration_s,
                                 load=load, seed=seed)
-                jobs = sim.run()
+                jobs_done = sim.run()
                 res["raptor" if raptor else "stock"] = summarize(
-                    [j.response for j in jobs])
+                    [j.response for j in jobs_done])
             res["mean_ratio"] = res["raptor"]["mean"] / res["stock"]["mean"]
             out[f"{name}/{load}"] = res
     return out
 
 
-def fig7_other_workloads(seed: int = 0, duration_s: float = 1800.0) -> Dict:
+def fig7_other_workloads(seed: int = 0, duration_s: float = 1800.0,
+                         engine: str = "vector", jobs: int = None,
+                         trials: int = 16) -> Dict:
+    """Wordcount + thumbnail DAG manifests (paper fig 7), HA deployment.
+
+    The vector engine replays the DAG dependency masks on-device (one
+    trial = one ``duration_s``-long arrival stream unless ``jobs`` is
+    given); the scalar path is the agreement oracle (same semantics,
+    ~10-50x slower).
+    """
+    if engine == "vector":
+        try:
+            from repro.sim.vector_queue import (QueueFlightSim,
+                                                thumbnail_queue,
+                                                wordcount_queue)
+        except ImportError:       # numpy-only interpreter: scalar oracle
+            return fig7_other_workloads(seed=seed, duration_s=duration_s,
+                                        engine="scalar")
+        out = {}
+        for name, qwl in (("wordcount", wordcount_queue()),
+                          ("thumbnail", thumbnail_queue())):
+            sim = QueueFlightSim(qwl, load="medium", seed=seed, **HA)
+            n = jobs if jobs is not None else max(
+                256, int(sim.rate_hz * duration_s))
+            out[name] = sim.run_pair(n, trials)
+        return out
     return {
         "wordcount": run_pair(wordcount_workload, HA, seed=seed,
                               duration_s=duration_s),
         "thumbnail": run_pair(thumbnail_workload, HA, seed=seed,
                               duration_s=duration_s),
     }
+
+
+def load_sweep_util(utils=(0.15, 0.3, 0.45, 0.6, 0.75), seed: int = 0,
+                    jobs: int = 1024, trials: int = 16) -> Dict:
+    """Closed-loop keygen ratio across a *continuous* utilisation grid.
+
+    The arrival rate is a traced argument of the queue engine, so the whole
+    grid is one vmapped call per deployment — the fig6 curve at arbitrary
+    resolution (a regime the scalar sim cannot sweep in reasonable time).
+    Overheads use the Table-6 regime nearest each utilisation.
+    """
+    from repro.sim.vector_queue import keygen_queue, rate_sweep
+    out: Dict[str, dict] = {}
+    for name, dep in (("one_az_5w", LOW_AVAIL), ("three_az_15w", HA)):
+        wl = keygen_queue()
+        rates = [u * dep["num_workers"] / wl.work_est_ws for u in utils]
+        loads = ["low" if u < 0.3 else ("medium" if u < 0.6 else "high")
+                 for u in utils]
+        res = rate_sweep(wl, rates, loads=loads,
+                         num_workers=dep["num_workers"],
+                         num_azs=dep["num_azs"], jobs=jobs, trials=trials,
+                         seed=seed)
+        for u, pair in zip(utils, res):
+            out[f"{name}/util{u:.2f}"] = pair
+    return out
 
 
 def sweep_scale(trials: int = 20000, seed: int = 0) -> Dict:
@@ -112,7 +185,8 @@ def sweep_scale(trials: int = 20000, seed: int = 0) -> Dict:
     """
     from repro.core.analytics import raptor_speedup_prediction
     from repro.sim.vector import (VectorFlightSim, exponential_vector,
-                                  keygen_vector, reliability_vector)
+                                  keygen_vector, reliability_vector,
+                                  sweep_pairs)
     out: Dict[str, dict] = {}
 
     # Table 7: keygen on the HA deployment (open-loop limit) + theory
@@ -126,31 +200,42 @@ def sweep_scale(trials: int = 20000, seed: int = 0) -> Dict:
                             seed=seed)
         out[f"table8/{load}"] = s.run_pair(trials)
 
-    # AZ sweep 1→8: a flight of 4 at rho=0.95 — replicas decorrelate as
-    # they spread, the paper's "only at horizontal scale" effect
-    az_curve = {}
-    for num_azs in (1, 2, 3, 4, 6, 8):
-        s = VectorFlightSim(exponential_vector(2, 1000.0), num_azs=num_azs,
-                            flight=4, rho=0.95, seed=seed)
-        az_curve[num_azs] = s.run_pair(trials)["mean_ratio"]
+    # AZ sweep 1→8 (flight of 4) and flight sweep 2→16 (8 AZs): the whole
+    # grid runs pad-and-masked through sweep_pairs — flight size and AZ
+    # count are traced, so the curves share a handful of compilations
+    # instead of paying one (~1.5s, BENCH_sim.json) per point
+    az_points = [dict(flight=4, num_azs=a) for a in (1, 2, 3, 4, 6, 8)]
+    fl_points = [dict(flight=f, num_azs=8) for f in (2, 4, 8, 16)]
+    wl = exponential_vector(2, 1000.0)
+    res = sweep_pairs(wl, az_points + fl_points, trials=trials, seed=seed)
+    az_res, fl_res = res[:len(az_points)], res[len(az_points):]
     out["az_sweep"] = {
-        "ratio_by_azs": az_curve,
+        "ratio_by_azs": {c["num_azs"]: r["mean_ratio"]
+                         for c, r in zip(az_points, az_res)},
         "theory_independent": raptor_speedup_prediction(num_tasks=2,
                                                         flight=4),
     }
+    out["flight_sweep"] = {
+        c["flight"]: {
+            "mean_ratio": r["mean_ratio"],
+            "theory": raptor_speedup_prediction(num_tasks=2,
+                                                flight=c["flight"]),
+        } for c, r in zip(fl_points, fl_res)}
 
-    # flight-size sweep 2→16 at full independence (8 AZs, exp tasks):
-    # the mutually-independent-exponential prediction, order stat by
-    # order stat
-    fl_curve = {}
-    for flight in (2, 4, 8, 16):
-        s = VectorFlightSim(exponential_vector(2, 1000.0), num_azs=8,
-                            flight=flight, rho=0.95, seed=seed)
-        fl_curve[flight] = {
-            "mean_ratio": s.run_pair(trials)["mean_ratio"],
-            "theory": raptor_speedup_prediction(num_tasks=2, flight=flight),
-        }
-    out["flight_sweep"] = fl_curve
+    # paper-gap probe (ROADMAP): at F >> K the measured ratio plateaus far
+    # above the K*E[min_F]/E[max_K] prediction.  Randomised (non-cyclic)
+    # member orders barely move it — the plateau is the K!-order split of
+    # the flight (only ~F/K members race any one task), not an artefact of
+    # cyclic-shift duplication.
+    rnd = VectorFlightSim(exponential_vector(2, 1000.0), num_azs=8,
+                          flight=16, rho=0.95, seed=seed,
+                          sequences="random")
+    out["flight_sweep_random"] = {
+        "flight": 16,
+        "mean_ratio": rnd.run_pair(trials)["mean_ratio"],
+        "cyclic_ratio": out["flight_sweep"][16]["mean_ratio"],
+        "theory": raptor_speedup_prediction(num_tasks=2, flight=16),
+    }
 
     # Figure 8 at vector scale: empirical flight failure vs the exact form
     rel = {}

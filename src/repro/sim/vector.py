@@ -8,11 +8,22 @@ paper's correlation model (``Z = rho*S + (1-rho)*X``, S shared per AZ — see
 each flight's race with a fixed-trip ``lax.scan`` under ``vmap``, so a
 (flight size × AZ count × rho × load) sweep runs on-device in milliseconds.
 
-Scope: open-loop, independent-task manifests (ssh-keygen, the Figure-8
-reliability probes) — one trial is one invocation on an otherwise idle
-cluster, i.e. the zero-queueing limit of the scalar sim.  The scalar sim
-remains the oracle: ``tests/test_sim_vector.py`` checks seeded agreement on
-mean response and failure rate at low utilisation.
+Scope: this module is the OPEN-LOOP tier — independent-task manifests
+(ssh-keygen, the Figure-8 reliability probes), one trial = one invocation
+on an otherwise idle cluster, i.e. the zero-queueing limit of the scalar
+sim.  The closed-loop tier lives in :mod:`repro.sim.vector_queue`: batched
+M/G/c worker queues replayed over whole Poisson arrival streams, plus the
+DAG manifests (wordcount, thumbnail) via per-member dependency masks — so
+every load-dependent paper figure (fig6, fig7, Table 8 at real
+utilisation) also runs on-device.  Config sweeps are batched in both
+tiers: :func:`sweep_pairs` pads-and-masks over flight size and traces
+rho/AZ-count/overhead so a whole (flight x AZ x rho x load) grid shares a
+handful of compilations instead of paying ~1.5s of XLA compile per point
+(BENCH_sim.json), and ``sequences="random"`` swaps the §3.3.3 cyclic
+shifts for per-trial random orders (the ROADMAP F>>K paper-gap probe).
+The scalar sim remains the oracle: ``tests/test_sim_vector.py`` and
+``tests/test_sim_queue.py`` check seeded agreement on mean response,
+tail percentiles, and failure rate from low through high utilisation.
 
 Flight semantics mirror the scalar sim exactly (paper §3.3.3–§3.3.4):
 
@@ -100,7 +111,7 @@ def _overhead_draws(key, shape, med, p90):
 # one flight trial: fixed-trip event scan (vmapped over the batch)
 # --------------------------------------------------------------------------
 
-def _flight_trial(z_seq, fail_seq, t_join, seq, slat):
+def _flight_trial(z_seq, fail_seq, t_join, seq, slat, active=None):
     """Replay one flight race.
 
     Everything per-member is laid out in that member's *sequence order* so
@@ -110,13 +121,17 @@ def _flight_trial(z_seq, fail_seq, t_join, seq, slat):
     z_seq:    (F, K) attempt durations, z_seq[m, j] for task seq[m, j]
     fail_seq: (F, K) attempt-error indicators, same layout
     t_join:   (F,)   member join times (arrival control-plane overhead)
-    seq:      (F, K) member task orders (constant cyclic shifts)
+    seq:      (F, K) member task orders (cyclic shifts or per-trial perms)
+    active:   (F,) bool or None — padding mask for the batched sweeps;
+              inactive members never join (fin stays inf, no candidates)
     Returns (response_time, ok).
     """
     F, K = z_seq.shape
     k_arange = jnp.arange(K)
     done0 = jnp.zeros(K, dtype=bool)
     attempted0 = jnp.zeros((F, K), dtype=bool).at[:, 0].set(True)
+    if active is not None:
+        attempted0 = attempted0 | ~active[:, None]
     cur0 = seq[:, 0]                      # current task id per member
     curfail0 = fail_seq[:, 0]             # whether that attempt will error
     fin0 = t_join + z_seq[:, 0]
@@ -173,12 +188,15 @@ def _flight_trial(z_seq, fail_seq, t_join, seq, slat):
 @functools.partial(
     jax.jit,
     static_argnames=("trials", "flight", "num_tasks", "num_azs", "dist",
-                     "fail_prob", "oh_med", "oh_p90"))
+                     "fail_prob", "oh_med", "oh_p90", "sequences"))
 def _raptor_batch(key, *, trials, flight, num_tasks, num_azs, dist,
                   rho, mean, offset, cv, fail_prob, stage_oh, slat,
-                  oh_med, oh_p90):
+                  oh_med, oh_p90, sequences="cyclic"):
     F, K, A = flight, num_tasks, num_azs
-    k_z, k_f, k_o = jax.random.split(key, 3)
+    if sequences == "random":
+        k_z, k_f, k_o, k_q = jax.random.split(key, 4)
+    else:
+        k_z, k_f, k_o = jax.random.split(key, 3)
     az = jnp.arange(F) % A                        # HA spread placement
     # one fused draw for the AZ-shared S block and the private X block —
     # threefry invocations dominate the batch cost on CPU
@@ -196,6 +214,17 @@ def _raptor_batch(key, *, trials, flight, num_tasks, num_azs, dist,
     # member 0 joins at the arrival overhead; later members pay a second
     # control-plane hop (the fork's recursive invocation, §3.3.2)
     t_join = oh0[:, None] + jnp.where(jnp.arange(F) == 0, 0.0, ohm)
+    if sequences == "random":
+        # fresh uniform order per (trial, member) — the paper-gap probe for
+        # the F >> K plateau (cyclic shifts duplicate orders; see ROADMAP)
+        perm = jax.vmap(lambda k: jax.random.permutation(k, K))(
+            jax.random.split(k_q, trials * F)).reshape(trials, F, K)
+        z_seq = jnp.take_along_axis(z, perm, axis=2)
+        fail_seq = jnp.take_along_axis(fail, perm, axis=2)
+        t_resp, ok = jax.vmap(
+            lambda zz, ff, tj, sq: _flight_trial(zz, ff, tj, sq, slat))(
+                z_seq, fail_seq, t_join, perm)
+        return t_resp, ok, fail
     seq = jnp.stack([jnp.roll(jnp.arange(K), -(m % K)) for m in range(F)])
     # permute draws into sequence order once, outside the event scan
     seq_b = jnp.broadcast_to(seq, (trials, F, K))
@@ -207,13 +236,24 @@ def _raptor_batch(key, *, trials, flight, num_tasks, num_azs, dist,
     return t_resp, ok, fail
 
 
+def _stock_service_mix(key, trials, num_tasks, rho, mean, offset, dist, cv):
+    """Stock per-task service times.  Distinct tasks never share an S draw
+    (InvocationDraws keys S by (task, az)), but each task's time is still
+    the rho-mixture of two i.i.d. draws — same mean, lighter tail than one
+    raw draw; the p90/p99 comparisons against the scalar oracle are
+    sensitive to this."""
+    zz = _service_draws(key, (trials, 2, num_tasks), mean, dist, cv)
+    return rho * zz[:, 0] + (1 - rho) * zz[:, 1] + offset
+
+
 @functools.partial(
     jax.jit, static_argnames=("trials", "num_tasks", "dist", "fail_prob",
                               "oh_med", "oh_p90"))
-def _stock_batch(key, *, trials, num_tasks, dist, mean, offset, cv,
+def _stock_batch(key, *, trials, num_tasks, dist, rho, mean, offset, cv,
                  fail_prob, oh_med, oh_p90):
     k_z, k_f, k_o = jax.random.split(key, 3)
-    z = _service_draws(k_z, (trials, num_tasks), mean, dist, cv) + offset
+    z = _stock_service_mix(k_z, trials, num_tasks, rho, mean, offset, dist,
+                           cv)
     if fail_prob == 0.0:
         fail = jnp.zeros((trials, num_tasks), dtype=bool)
     else:
@@ -222,6 +262,147 @@ def _stock_batch(key, *, trials, num_tasks, dist, mean, offset, cv,
     t_resp = oh + jnp.max(z, axis=1)              # fork-join: wait for max
     ok = ~jnp.any(fail, axis=1)
     return t_resp, ok, fail
+
+
+# --------------------------------------------------------------------------
+# batched config sweeps: pad-and-mask over flight size, traced rho/AZ/load
+# --------------------------------------------------------------------------
+# sweep_scale() used to pay a full XLA compile (~1.5s, BENCH_sim.json) per
+# (flight, num_azs, rho, load) point because every knob was a static jit
+# argument.  Here the knobs are *traced*: flights are padded to a common
+# F_pad with inactive members masked out of the event scan, the AZ index is
+# a gather from an A_pad-row shared block, and the Table-6 overhead enters
+# as (mu, sigma) scalars — so one compilation serves the whole config grid
+# via vmap, and adding a point costs milliseconds.
+
+def _raptor_sweep_core(key, flight, num_azs, rho, mean, offset, cv,
+                       stage_oh, slat, oh_mu, oh_sigma, *, trials,
+                       flight_max, num_tasks, azs_max, dist, fail_prob):
+    F, K, A = flight_max, num_tasks, azs_max
+    k_z, k_f, k_o = jax.random.split(key, 3)
+    active = jnp.arange(F) < flight
+    az = jnp.arange(F) % num_azs                  # traced AZ spread
+    sx = _service_draws(k_z, (trials, A + F, K), mean, dist, cv)
+    s, x = sx[:, :A, :], sx[:, A:, :]
+    z = rho * s[:, az, :] + (1 - rho) * x + offset + stage_oh
+    if fail_prob == 0.0:
+        fail = jnp.zeros((trials, F, K), dtype=bool)
+    else:
+        fail = jax.random.bernoulli(k_f, fail_prob, (trials, F, K))
+    oh = jnp.exp(oh_mu + oh_sigma * jax.random.normal(k_o, (trials, F + 1)))
+    t_join = oh[:, :1] + jnp.where(jnp.arange(F) == 0, 0.0, oh[:, 1:])
+    t_join = jnp.where(active, t_join, jnp.inf)   # padding: never joins
+    seq = jnp.stack([jnp.roll(jnp.arange(K), -(m % K)) for m in range(F)])
+    seq_b = jnp.broadcast_to(seq, (trials, F, K))
+    z_seq = jnp.take_along_axis(z, seq_b, axis=2)
+    fail_seq = jnp.take_along_axis(fail, seq_b, axis=2)
+    t_resp, ok = jax.vmap(
+        lambda zz, ff, tj: _flight_trial(zz, ff, tj, seq, slat, active))(
+            z_seq, fail_seq, t_join)
+    # a padded member's error draw never ran, so it must be neutral in the
+    # all-attempts-errored reduction (flight_fail_rate_batch ANDs over the
+    # flight axis): force it True, i.e. "contributes no rescue attempt"
+    fail = fail | ~active[None, :, None]
+    return t_resp, ok, fail
+
+
+def _stock_sweep_core(key, rho, mean, offset, cv, oh_mu, oh_sigma, *,
+                      trials, num_tasks, dist, fail_prob):
+    k_z, k_f, k_o = jax.random.split(key, 3)
+    z = _stock_service_mix(k_z, trials, num_tasks, rho, mean, offset, dist,
+                           cv)
+    if fail_prob == 0.0:
+        fail = jnp.zeros((trials, num_tasks), dtype=bool)
+    else:
+        fail = jax.random.bernoulli(k_f, fail_prob, (trials, num_tasks))
+    oh = jnp.exp(oh_mu + oh_sigma * jax.random.normal(k_o, (trials,)))
+    t_resp = oh + jnp.max(z, axis=1)
+    ok = ~jnp.any(fail, axis=1)
+    return t_resp, ok, fail
+
+
+@functools.lru_cache(maxsize=None)
+def _raptor_sweep_runner(trials, flight_max, num_tasks, azs_max, dist,
+                         fail_prob):
+    core = functools.partial(
+        _raptor_sweep_core, trials=trials, flight_max=flight_max,
+        num_tasks=num_tasks, azs_max=azs_max, dist=dist,
+        fail_prob=fail_prob)
+    return jax.jit(jax.vmap(core, in_axes=(None, 0, 0, 0, None, None, None,
+                                           None, None, 0, 0)))
+
+
+@functools.lru_cache(maxsize=None)
+def _stock_sweep_runner(trials, num_tasks, dist, fail_prob):
+    core = functools.partial(_stock_sweep_core, trials=trials,
+                             num_tasks=num_tasks, dist=dist,
+                             fail_prob=fail_prob)
+    return jax.jit(jax.vmap(core, in_axes=(None, 0, None, None, None,
+                                           0, 0)))
+
+
+def sweep_pairs(wl: "VectorWorkload", configs, *, trials: int = 20_000,
+                seed: int = 0):
+    """Run many (flight, num_azs, rho, load) points in ONE compile each for
+    the raptor and stock paths.
+
+    ``configs`` is a sequence of dicts with keys ``flight``, ``num_azs``,
+    and optional ``rho`` (default 0.95) and ``load`` (default "medium").
+    Returns one dict per config with stock/raptor summaries + mean ratio.
+    """
+    cfgs = [dict(flight=int(c["flight"]), num_azs=int(c["num_azs"]),
+                 rho=float(c.get("rho", 0.95)),
+                 load=c.get("load", "medium")) for c in configs]
+    # Table-6 overhead regimes are keyed by (ha, load) — a 1-AZ config in
+    # the same sweep as HA configs must NOT inherit the HA overhead row
+    oh = {(c["num_azs"] > 1, c["load"]): lognormal_params(
+        *OverheadModel.TABLE[(c["num_azs"] > 1, c["load"])]) for c in cfgs}
+
+    def oh_of(c):
+        return oh[(c["num_azs"] > 1, c["load"])]
+
+    # bucket configs by padded flight size (next power of two): one compile
+    # per bucket, and the masked-member compute waste stays under 2x (a
+    # single global F_pad would make every small flight pay the largest)
+    buckets = {}
+    for i, c in enumerate(cfgs):
+        f_pad = 1 << max(c["flight"] - 1, 0).bit_length()
+        buckets.setdefault(f_pad, []).append(i)
+
+    rap = [None] * len(cfgs)
+    for f_pad, idxs in sorted(buckets.items()):
+        sub = [cfgs[i] for i in idxs]
+        a_pad = max(c["num_azs"] for c in sub)
+        res = _raptor_sweep_runner(
+            int(trials), f_pad, wl.num_tasks, a_pad, wl.dist,
+            wl.fail_prob)(
+                jax.random.PRNGKey(seed * 2 + 1),
+                jnp.array([c["flight"] for c in sub]),
+                jnp.array([c["num_azs"] for c in sub]),
+                jnp.array([c["rho"] for c in sub]),
+                wl.mean_ms, wl.offset_ms, wl.cv, wl.stage_overhead_ms, 0.5,
+                jnp.array([oh_of(c)[0] for c in sub]),
+                jnp.array([oh_of(c)[1] for c in sub]))
+        for j, i in enumerate(idxs):
+            rap[i] = (res[0][j], res[1][j], res[2][j])
+
+    stk = _stock_sweep_runner(
+        int(trials), wl.num_tasks, wl.dist, wl.fail_prob)(
+            jax.random.PRNGKey(seed * 2),
+            jnp.array([c["rho"] for c in cfgs]), wl.mean_ms, wl.offset_ms,
+            wl.cv, jnp.array([oh_of(c)[0] for c in cfgs]),
+            jnp.array([oh_of(c)[1] for c in cfgs]))
+
+    out = []
+    for i, c in enumerate(cfgs):
+        r = VectorResult(rap[i][0], rap[i][1], rap[i][2], True)
+        s = VectorResult(stk[0][i], stk[1][i], stk[2][i], False)
+        res = dict(c)
+        res["raptor"] = r.summary()
+        res["stock"] = s.summary()
+        res["mean_ratio"] = res["raptor"]["mean"] / res["stock"]["mean"]
+        out.append(res)
+    return out
 
 
 # --------------------------------------------------------------------------
@@ -266,7 +447,10 @@ class VectorFlightSim:
 
     def __init__(self, wl: VectorWorkload, *, num_azs: int = 3,
                  flight: int = 2, rho: float = 0.95, load: str = "medium",
-                 stream_latency_ms: float = 0.5, seed: int = 0):
+                 stream_latency_ms: float = 0.5, seed: int = 0,
+                 sequences: str = "cyclic"):
+        if sequences not in ("cyclic", "random"):
+            raise ValueError(f"unknown sequences mode {sequences!r}")
         self.wl = wl
         self.num_azs = int(num_azs)
         self.flight = int(flight)
@@ -274,6 +458,7 @@ class VectorFlightSim:
         self.load = load
         self.slat = float(stream_latency_ms)
         self.seed = int(seed)
+        self.sequences = sequences
         ha = self.num_azs > 1
         self.oh_med, self.oh_p90 = OverheadModel.TABLE[(ha, load)]
 
@@ -289,12 +474,14 @@ class VectorFlightSim:
                 rho=self.rho, mean=wl.mean_ms, offset=wl.offset_ms,
                 cv=wl.cv, fail_prob=wl.fail_prob,
                 stage_oh=wl.stage_overhead_ms, slat=self.slat,
-                oh_med=self.oh_med, oh_p90=self.oh_p90)
+                oh_med=self.oh_med, oh_p90=self.oh_p90,
+                sequences=self.sequences)
         else:
             t, ok, fail = _stock_batch(
                 self._key(False), trials=int(trials),
-                num_tasks=wl.num_tasks, dist=wl.dist, mean=wl.mean_ms,
-                offset=wl.offset_ms, cv=wl.cv, fail_prob=wl.fail_prob,
+                num_tasks=wl.num_tasks, dist=wl.dist, rho=self.rho,
+                mean=wl.mean_ms, offset=wl.offset_ms, cv=wl.cv,
+                fail_prob=wl.fail_prob,
                 oh_med=self.oh_med, oh_p90=self.oh_p90)
         return VectorResult(t, ok, fail, raptor)
 

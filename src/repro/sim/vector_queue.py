@@ -1,0 +1,658 @@
+"""Closed-loop vectorized cluster engine: batched M/G/c worker queues and
+DAG flights replayed on-device.
+
+``sim/vector.py`` covers the open-loop zero-queueing limit — one invocation
+on an idle cluster.  This module closes the loop: each trial replays a whole
+Poisson arrival stream against a finite worker pool (the Table-6 overhead
+regime's deployment), so the load-dependent paper figures (fig6's load ×
+scale grid, fig7's DAG workloads, Table 8 at real utilisation) run as dense
+tensors instead of crawling through the scalar event loop.
+
+Structure (all on-device, ``vmap`` over trials and — for sweeps — configs):
+
+* an outer ``lax.scan`` over arrival events carries the per-worker
+  free-at-time vector; each arriving job claims workers (HA placement:
+  member ``m`` waits for the earliest-free worker in AZ ``m % A``), races
+  its flight, and scatters the member release times back into the pool;
+* the flight race itself is a fixed-trip one-hot event scan like
+  ``sim.vector._flight_trial``, extended with per-member dependency masks:
+  a member whose next task in sequence has unmet dependencies parks
+  (``fin = inf``) and is woken by the completion broadcast half an RTT
+  later — wordcount and thumbnail manifests replay with the scalar
+  ``FlightSim``'s §3.3.3/§3.3.4 semantics (cyclic-shift sequences from
+  ``core.dag.execution_sequence``, head-of-line dependency waits,
+  first-success broadcast preemption, at-most-one attempt per member);
+* the stock path replays fork-join stage-by-stage: task ready times chain
+  through the dependency masks (plus the storage hop + control-plane draw
+  per stage), and each task takes the earliest-free worker.
+
+Arrival rate, rho, and the Table-6 overhead parameters are *traced*
+arguments, so a whole load sweep shares one compilation via ``vmap`` over
+the config axis (``sweep_runner``).
+
+Fidelity notes (vs the scalar oracle, tests/test_sim_queue.py):
+
+* jobs are admitted to workers whole-job FCFS in arrival order; the scalar
+  event loop interleaves at task granularity, so deep queues (high load)
+  read slightly pessimistic here;
+* a dependency wait inside a flight ends exactly ``stream_latency_ms``
+  after the unblocking broadcast (the scalar sim polls every half-RTT, so
+  it lands within one poll of the same instant);
+* with ``fail_prob > 0`` *and* dependencies, a fully-deadlocked flight
+  (every member parked on a task whose attempts all errored) terminates
+  with ``ok=False`` at its last event; the scalar sim leaves such jobs
+  unfinished and drops them.  The paper's DAG workloads inject no errors,
+  so the oracle comparison is unaffected.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core.analytics import summarize_batch
+from repro.sim.cluster import OverheadModel, lognormal_params
+from repro.sim.workloads import (KEYGEN_CV, KEYGEN_MEAN_MS, KEYGEN_OFFSET_MS,
+                                 THUMB_CV, THUMB_DOWNLOAD_MS, THUMB_RESIZE_MS,
+                                 WC_MAP_MS, WC_REDUCE_MS, WC_SPLIT_MS,
+                                 WC_STORAGE_HOP_MS)
+from repro.sim.workloads import arrival_rate_hz as _rate_for_load
+
+
+@dataclasses.dataclass(frozen=True)
+class QueueWorkload:
+    """One manifest as dense per-task tensors (raptor + stock task graphs).
+
+    ``deps`` maps task -> tuple of prerequisite tasks (the flight manifest);
+    the stock graph may differ (thumbnail's stock functions re-download the
+    source, so its task list drops the shared download stage and each task
+    pays ``stock_extra_means`` as a second independent service draw).
+    """
+    name: str
+    tasks: Tuple[str, ...]
+    task_means: Tuple[float, ...]
+    deps: Tuple[Tuple[str, ...], ...]       # aligned with ``tasks``
+    flight: int
+    dist: str = "exp"                       # "exp" | "lognorm"
+    cv: float = 1.0
+    offset_ms: float = 0.0
+    raptor_stage_ms: float = 0.5            # stream hop per attempt
+    stock_tasks: Tuple[str, ...] = None
+    stock_means: Tuple[float, ...] = None
+    stock_extra_means: Tuple[float, ...] = None
+    stock_deps: Tuple[Tuple[str, ...], ...] = None
+    stock_stage_ms: float = 0.0             # storage round-trip per stage hop
+    fail_prob: float = 0.0
+    work_est_ws: float = 2.0
+
+    def stock_graph(self):
+        if self.stock_tasks is None:
+            return self.tasks, self.task_means, self.deps
+        return self.stock_tasks, self.stock_means, self.stock_deps
+
+    def stock_extras(self) -> Tuple[float, ...]:
+        tasks = self.stock_graph()[0]
+        if self.stock_extra_means is None:
+            return (0.0,) * len(tasks)
+        return self.stock_extra_means
+
+
+def keygen_queue(fail_prob: float = 0.0) -> QueueWorkload:
+    """ssh-keygen: two independent entropy-bound tasks, flight of 2."""
+    return QueueWorkload(
+        "ssh-keygen", ("keygen_a", "keygen_b"),
+        (KEYGEN_MEAN_MS, KEYGEN_MEAN_MS), ((), ()), flight=2,
+        dist="lognorm", cv=KEYGEN_CV, offset_ms=KEYGEN_OFFSET_MS,
+        fail_prob=fail_prob, work_est_ws=1.9)
+
+
+def wordcount_queue() -> QueueWorkload:
+    """Map-reduce: split -> 4 maps -> reduce; stock pays the S3 hop."""
+    tasks = ("split", "map0", "map1", "map2", "map3", "reduce")
+    means = (WC_SPLIT_MS,) + (WC_MAP_MS,) * 4 + (WC_REDUCE_MS,)
+    deps = ((),) + (("split",),) * 4 + (("map0", "map1", "map2", "map3"),)
+    return QueueWorkload("wordcount", tasks, means, deps, flight=2,
+                         dist="exp", stock_stage_ms=WC_STORAGE_HOP_MS,
+                         work_est_ws=4.2)
+
+
+def thumbnail_queue() -> QueueWorkload:
+    """Download + 4 resizes; stock functions each re-download the source."""
+    thumbs = tuple(f"thumb{i}" for i in range(4))
+    return QueueWorkload(
+        "thumbnail", ("download",) + thumbs,
+        (THUMB_DOWNLOAD_MS,) + (THUMB_RESIZE_MS,) * 4,
+        ((),) + (("download",),) * 4, flight=4,
+        dist="lognorm", cv=THUMB_CV,
+        stock_tasks=thumbs, stock_means=(THUMB_RESIZE_MS,) * 4,
+        stock_extra_means=(THUMB_DOWNLOAD_MS,) * 4,
+        stock_deps=((),) * 4, work_est_ws=5.6)
+
+
+def exponential_queue(num_tasks: int = 2, mean_ms: float = 1000.0,
+                      flight: int = 2) -> QueueWorkload:
+    """Pure exp(mu) independent tasks — the §4.2.1 theory's hypothesis."""
+    return QueueWorkload(
+        f"exp{num_tasks}", tuple(f"t{i}" for i in range(num_tasks)),
+        (mean_ms,) * num_tasks, ((),) * num_tasks, flight=flight,
+        dist="exp", work_est_ws=num_tasks * mean_ms / 1000.0)
+
+
+# --------------------------------------------------------------------------
+# host-side manifest prep (sequences + dependency masks)
+# --------------------------------------------------------------------------
+
+def _dep_mask(tasks, deps) -> np.ndarray:
+    idx = {t: i for i, t in enumerate(tasks)}
+    m = np.zeros((len(tasks), len(tasks)), dtype=bool)
+    for t, ds in zip(tasks, deps):
+        for d in ds:
+            m[idx[t], idx[d]] = True
+    return m
+
+
+def _member_sequences(wl: QueueWorkload, flight: int) -> np.ndarray:
+    """(F, K) member task orders — the scalar sim's exact §3.3.3 sequences
+    (``core.dag.execution_sequence`` shift-at-scan-level linearisation)."""
+    from repro.core.dag import execution_sequence
+    from repro.core.manifest import ActionManifest, FunctionSpec
+    man = ActionManifest(
+        tuple(FunctionSpec(t, None, tuple(d))
+              for t, d in zip(wl.tasks, wl.deps)),
+        concurrency=max(flight, 1), name=wl.name)
+    idx = {t: i for i, t in enumerate(wl.tasks)}
+    return np.array([[idx[t] for t in execution_sequence(man, m)]
+                     for m in range(flight)])
+
+
+def _topo_order(dep_mask: np.ndarray):
+    order, done = [], set()
+    while len(order) < dep_mask.shape[0]:
+        for t in range(dep_mask.shape[0]):
+            if t not in done and all(d in done for d in np.where(dep_mask[t])[0]):
+                order.append(t)
+                done.add(t)
+                break
+        else:  # pragma: no cover - guarded by manifest validation
+            raise ValueError("cyclic stock task graph")
+    return tuple(order)
+
+
+# --------------------------------------------------------------------------
+# one flight race with dependency masks (the DAG-aware event scan)
+# --------------------------------------------------------------------------
+
+def dag_flight_trial(z_seq, fail_seq, t_join, seq, dep_mask, slat,
+                     direct_start: bool = False):
+    """Replay one flight of a (possibly DAG) manifest.
+
+    Like ``sim.vector._flight_trial`` but members must respect ``dep_mask``
+    ((K, K) bool, ``dep_mask[t, d]`` = task t needs task d): a member whose
+    next task in sequence is not yet runnable parks (``fin = inf``) and is
+    woken by the completion broadcast.  Member joins are modelled as events
+    too (``cur = -1`` sentinel), so queue-delayed join times flow through
+    the same scan.  Returns ``(t_resp, ok, t_release)`` with per-member
+    worker release times (sequence exhausted, or flight end).
+
+    ``direct_start=True`` (valid only when every member's first task is
+    dependency-free and first tasks are member-distinct, so a late joiner
+    can never find its first task already completed mid-flight) skips the
+    F join events: members begin mid-attempt at ``t_join`` and the scan
+    shrinks from F*(K+1) to F*K trips — the fast path for the fig6 sweep.
+    """
+    F, K = z_seq.shape
+    # dep_mask is a trace-time constant (the manifest), so a dep-free
+    # workload statically elides the runnable computation below
+    has_deps = bool(np.asarray(dep_mask).any())
+    k_ar = jnp.arange(K)
+    done0 = jnp.zeros(K, dtype=bool)
+    released0 = jnp.zeros((F,), dtype=bool)
+    trel0 = jnp.zeros((F,))
+    if direct_start:
+        attempted0 = jnp.zeros((F, K), dtype=bool).at[:, 0].set(True)
+        cur0 = seq[:, 0]
+        curfail0 = fail_seq[:, 0]
+        fin0 = t_join + z_seq[:, 0]
+    else:
+        attempted0 = jnp.zeros((F, K), dtype=bool)
+        cur0 = jnp.full((F,), -1)
+        curfail0 = jnp.zeros((F,), dtype=bool)
+        fin0 = t_join
+
+    def step(carry, _):
+        (done, attempted, cur, curfail, fin, released, trel,
+         finished, ok, t_resp) = carry
+        t = jnp.min(fin)
+        e_hot = jnp.arange(F) == jnp.argmin(fin)
+        any_busy = ~jnp.isinf(t)
+        task = jnp.sum(jnp.where(e_hot, cur, 0))      # -1 on a join event
+        succ = any_busy & (task >= 0) & ~jnp.any(curfail & e_hot)
+        done2 = done | ((k_ar == task) & succ)
+        busy = ~jnp.isinf(fin)
+        # first-success broadcast preempts peers mid-`task` (§3.3.4)
+        preempted = succ & (cur == task) & busy & ~e_hot
+        freed = (e_hot & any_busy) | preempted
+        busy_after = busy & ~freed
+        idle = ~busy_after & ~released
+        # next task per member: first in its shifted order neither complete
+        # nor already attempted by this member (head-of-line: no skipping)
+        cand = (~done2[seq]) & (~attempted)
+        has_next = jnp.any(cand, axis=1)
+        j_hot = k_ar[None, :] == jnp.argmax(cand, axis=1)[:, None]
+        nxt = jnp.sum(jnp.where(j_hot, seq, 0), axis=1)
+        z_next = jnp.sum(jnp.where(j_hot, z_seq, 0.0), axis=1)
+        f_next = jnp.any(j_hot & fail_seq, axis=1)
+        can_start = idle & has_next
+        if has_deps:
+            can_start &= ~jnp.any(dep_mask[nxt] & ~done2, axis=1)
+        # the finisher chains immediately; preempted/woken members restart
+        # after the stream half-RTT
+        start = jnp.where(e_hot, t, t + slat)
+        fin2 = jnp.where(can_start, start + z_next,
+                         jnp.where(busy_after, fin, jnp.inf))
+        cur2 = jnp.where(can_start, nxt, jnp.where(busy_after, cur, -1))
+        curfail2 = jnp.where(can_start, f_next,
+                             jnp.where(busy_after, curfail, False))
+        attempted2 = attempted | (j_hot & can_start[:, None])
+        newly_rel = idle & ~has_next
+        released2 = released | newly_rel
+        trel2 = jnp.where(newly_rel, t, trel)
+        complete = jnp.all(done2)
+        no_busy = jnp.all(jnp.isinf(fin2))
+        terminal = (complete | no_busy) & ~finished
+        trel2 = jnp.where(terminal & ~released2, t, trel2)
+        released2 = released2 | terminal
+        keep = lambda new, old: jnp.where(finished, old, new)
+        carry2 = (keep(done2, done), keep(attempted2, attempted),
+                  keep(cur2, cur), keep(curfail2, curfail),
+                  keep(fin2, fin), keep(released2, released),
+                  keep(trel2, trel), finished | terminal,
+                  jnp.where(terminal, complete, ok),
+                  jnp.where(terminal, t, t_resp))
+        return carry2, None
+
+    carry0 = (done0, attempted0, cur0, curfail0, fin0, released0, trel0,
+              jnp.array(False), jnp.array(False), jnp.array(jnp.inf))
+    # F join events (unless direct_start) + at most F*K attempt completions
+    steps = F * K if direct_start else F * (K + 1)
+    (_, _, _, _, _, _, trel, _, ok, t_resp), _ = lax.scan(
+        step, carry0, None, length=steps, unroll=min(steps, 8))
+    return t_resp, ok, trel
+
+
+# --------------------------------------------------------------------------
+# closed-loop trial bodies (one whole arrival stream per trial)
+# --------------------------------------------------------------------------
+
+def _unit_draws(key, shape, dist: str, cv):
+    if dist == "exp":
+        return jax.random.exponential(key, shape)
+    sigma2 = jnp.log1p(cv * cv)
+    mu = -sigma2 / 2
+    return jnp.exp(mu + jnp.sqrt(sigma2) * jax.random.normal(key, shape))
+
+
+@functools.lru_cache(maxsize=None)
+def _raptor_trial_fn(jobs: int, W: int, A: int, F: int, K: int,
+                     seq_t: tuple, dep_t: tuple, dist: str, fail_prob: float):
+    """Per-trial closed-loop raptor replay, closed over the static manifest.
+
+    Traced args: arrival rate, rho, per-task means, offset, cv, stage
+    overhead, stream latency, and the Table-6 lognormal (mu, sigma) — so a
+    (load x rho) sweep vmaps over configs with one compilation.
+    """
+    seq = jnp.array(seq_t)
+    dep_mask = jnp.array(dep_t)
+    w_az = jnp.arange(W) % A
+    # members may begin mid-attempt (no join events) only if a late joiner
+    # can never find its first task already done while the flight still runs
+    direct = (not np.asarray(dep_t).any()
+              and len({s[0] for s in seq_t}) == F)
+
+    def trial(key, rate_hz, rho, means, offset, cv, stage_oh, slat,
+              oh_mu, oh_sigma):
+        k_a, k_s, k_f, k_o, k_p = jax.random.split(key, 5)
+        arrivals = jnp.cumsum(
+            jax.random.exponential(k_a, (jobs,)) * (1000.0 / rate_hz))
+        # one fused draw for the AZ-shared S block and the private X block
+        # (threefry invocations dominate the batch cost on CPU)
+        sx = _unit_draws(k_s, (jobs, A + F, K), dist, cv)
+        s, x = sx[:, :A, :], sx[:, A:, :]
+        if fail_prob == 0.0:
+            fail = jnp.zeros((jobs, F, K), dtype=bool)
+        else:
+            fail = jax.random.bernoulli(k_f, fail_prob, (jobs, F, K))
+        oh = jnp.exp(oh_mu + oh_sigma * jax.random.normal(k_o, (jobs, F + 1)))
+        # member 0 pays the arrival overhead; later members a second
+        # control-plane hop (the fork's recursive invocation, §3.3.2)
+        t_oh = oh[:, :1] + jnp.where(jnp.arange(F) == 0, 0.0, oh[:, 1:])
+        seq_b = jnp.broadcast_to(seq, (F, K))
+        fail_seq = jnp.take_along_axis(fail, jnp.broadcast_to(
+            seq, (jobs, F, K)), axis=2)
+        # placement tie-break randomness: the scalar sim picks uniformly
+        # among the free (fresh-AZ-preferred) workers.  A deterministic
+        # earliest-free pick keeps flight release pairs perfectly
+        # anti-correlated across AZs and co-location never ignites — the
+        # measured high-load colocation rate collapses to 0 vs the scalar
+        # sim's ~13%, understating the correlation penalty.  One priority
+        # vector per job is enough: members exclude each other's workers,
+        # so the conditional pick stays uniform.
+        prio = jax.random.uniform(k_p, (jobs, W))
+
+        def job_step(wfree, inp):
+            arrival, sj, xj, fj, ohj, prj = inp
+            # HA placement (scalar _pick_worker_for + backlog dispatch).
+            # Free at arrival: pick a uniform-random free worker in an AZ
+            # the flight hasn't used, else a uniform-random free worker.
+            # Queued: the member never chooses — it is handed exactly the
+            # next-released worker, whatever its AZ.  (Giving a queued
+            # member AZ preference among simultaneously-released flight
+            # pairs suppresses the scalar sim's ~13% high-load co-location
+            # and with it the congestion the paper's Kafka-queue regime
+            # shows — see tests/test_sim_queue.py.)
+            wf = wfree
+            used_az = jnp.zeros(A, dtype=bool)
+            t_disp, widx, m_az = [], [], []
+            for m in range(F):
+                t_any = jnp.min(wf)
+                contended = t_any > arrival
+                free = wf <= arrival
+                elig = (~used_az[w_az]) & free
+                # one argmax: fresh free workers rank in (1, 2], other free
+                # in (0, 1], busy at -1 — random-uniform within each tier
+                key = jnp.where(elig, prj + 1.0,
+                                jnp.where(free, prj, -1.0))
+                w = jnp.where(contended, jnp.argmin(wf), jnp.argmax(key))
+                az = w_az[w]
+                used_az = used_az.at[az].set(True)
+                t_disp.append(jnp.maximum(arrival, t_any))
+                widx.append(w)
+                m_az.append(az)
+                wf = wf.at[w].set(jnp.inf)
+            t_disp = jnp.stack(t_disp)
+            widx = jnp.stack(widx)
+            m_az = jnp.stack(m_az)
+            # the AZ-shared S block follows the *actual* placement, so
+            # co-located members (queue pressure) re-correlate like the
+            # scalar sim
+            zj = (rho * sj[m_az, :] + (1 - rho) * xj) * means \
+                + offset + stage_oh
+            z_seq = jnp.take_along_axis(zj, seq_b, axis=1)
+            t_resp, ok, t_rel = dag_flight_trial(
+                z_seq, fj, t_disp + ohj, seq, dep_mask, slat,
+                direct_start=direct)
+            # max guards the flight-finished-before-dispatch case (the
+            # scalar sim skips the dispatch; the worker was never taken)
+            wfree2 = wfree.at[widx].max(t_rel)
+            return wfree2, (t_resp - arrival, ok)
+
+        _, (resp, ok) = lax.scan(
+            job_step, jnp.zeros(W), (arrivals, s, x, fail_seq, t_oh, prio))
+        return resp, ok
+
+    return trial
+
+
+@functools.lru_cache(maxsize=None)
+def _stock_trial_fn(jobs: int, W: int, K: int, topo: tuple, dep_t: tuple,
+                    dist: str, fail_prob: float):
+    """Per-trial closed-loop stock fork-join replay (stage-chained FCFS)."""
+    dep_rows = np.array(dep_t)
+
+    def trial(key, rate_hz, rho, means, extras, offset, cv, stage_oh,
+              oh_mu, oh_sigma):
+        k_a, k_z, k_e, k_f, k_o, k_d = jax.random.split(key, 6)
+        arrivals = jnp.cumsum(
+            jax.random.exponential(k_a, (jobs,)) * (1000.0 / rate_hz))
+
+        def mix(key, scale):
+            # distinct tasks never share an S draw, but each task's time is
+            # still the rho-mixture of two i.i.d. draws — same mean, lighter
+            # tail than one raw draw (the scalar sim's InvocationDraws.draw)
+            k1, k2 = jax.random.split(key)
+            return (rho * _unit_draws(k1, (jobs, K), dist, cv)
+                    + (1 - rho) * _unit_draws(k2, (jobs, K), dist, cv)) * scale
+
+        z = mix(k_z, means) + offset + mix(k_e, extras)
+        if fail_prob == 0.0:
+            ok = jnp.ones((jobs,), dtype=bool)
+        else:
+            ok = ~jnp.any(jax.random.bernoulli(k_f, fail_prob, (jobs, K)),
+                          axis=1)
+        oh0 = jnp.exp(oh_mu + oh_sigma * jax.random.normal(k_o, (jobs,)))
+        ohd = jnp.exp(oh_mu + oh_sigma * jax.random.normal(k_d, (jobs, K)))
+
+        def job_step(wfree, inp):
+            arrival, zj, o0, od = inp
+            wf = wfree
+            fin = jnp.zeros(K)
+            # stage hops elapse BEFORE a worker is occupied (control-path
+            # delays, not service) — mirrors FlightSim._stock_enqueue_ready
+            for t in topo:
+                if dep_rows[t].any():
+                    ready = (jnp.max(jnp.where(jnp.array(dep_rows[t]),
+                                               fin, -jnp.inf))
+                             + stage_oh + od[t])
+                else:
+                    ready = arrival + o0
+                # best-fit booking: take the worker freed latest but still
+                # by `ready` (a single free-at time per worker cannot
+                # represent the idle hole a later stage would leave before
+                # its start — earliest-free booking leaks that hole and
+                # destabilizes multi-stage workloads at moderate load)
+                elig = wf <= ready
+                w = jnp.where(jnp.any(elig),
+                              jnp.argmax(jnp.where(elig, wf, -jnp.inf)),
+                              jnp.argmin(wf))
+                f = jnp.maximum(ready, wf[w]) + zj[t]
+                fin = fin.at[t].set(f)
+                wf = wf.at[w].set(f)
+            return wf, jnp.max(fin) - arrival
+
+        _, resp = lax.scan(job_step, jnp.zeros(W),
+                           (arrivals, z, oh0, ohd))
+        return resp, ok
+
+    return trial
+
+
+@functools.lru_cache(maxsize=None)
+def _raptor_runner(jobs, W, A, F, K, seq_t, dep_t, dist, fail_prob,
+                   n_configs: int = 0):
+    """Jitted (trials,)-vmapped raptor runner; with ``n_configs`` > 0 a
+    second vmap over (rate, oh_mu, oh_sigma) turns it into a config sweep.
+    Cached so repeated ``run()`` calls reuse the compiled executable."""
+    trial = _raptor_trial_fn(jobs, W, A, F, K, seq_t, dep_t, dist, fail_prob)
+    fn = jax.vmap(trial, in_axes=(0,) + (None,) * 9)
+    if n_configs:
+        fn = jax.vmap(fn, in_axes=(None, 0, None, None, None, None, None,
+                                   None, 0, 0))
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=None)
+def _stock_runner(jobs, W, K, topo, dep_t, dist, fail_prob,
+                  n_configs: int = 0):
+    trial = _stock_trial_fn(jobs, W, K, topo, dep_t, dist, fail_prob)
+    fn = jax.vmap(trial, in_axes=(0,) + (None,) * 9)
+    if n_configs:
+        fn = jax.vmap(fn, in_axes=(None, 0, None, None, None, None, None,
+                                   None, 0, 0))
+    return jax.jit(fn)
+
+
+# --------------------------------------------------------------------------
+# public driver
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class QueueResult:
+    response_ms: jnp.ndarray     # (trials, jobs)
+    ok: jnp.ndarray              # (trials, jobs) bool
+    raptor: bool
+
+    @property
+    def jobs(self) -> int:
+        return int(self.response_ms.size)
+
+    def fail_rate(self) -> float:
+        return float(1.0 - jnp.mean(self.ok))
+
+    def summary(self) -> dict:
+        s = {k: (int(v) if k == "n" else float(v))
+             for k, v in summarize_batch(self.response_ms.ravel()).items()}
+        s["fail_rate"] = self.fail_rate()
+        return s
+
+
+class QueueFlightSim:
+    """Closed-loop batched Monte-Carlo of one (workload, deployment) pair.
+
+    One *trial* is a whole replication of the queue: ``jobs`` Poisson
+    arrivals contending for ``num_workers`` workers spread over ``num_azs``
+    AZs, starting empty (like the scalar sim's measurement window).
+    """
+
+    def __init__(self, wl: QueueWorkload, *, num_workers: int = 15,
+                 num_azs: int = 3, flight: int = None, rho: float = 0.95,
+                 load: str = "medium", arrival_rate_hz: float = None,
+                 stream_latency_ms: float = 0.5, seed: int = 0):
+        self.wl = wl
+        self.W = int(num_workers)
+        self.A = int(num_azs)
+        self.flight = int(flight if flight is not None else wl.flight)
+        if self.flight > self.W:
+            # the placement loop hands each member a distinct worker; more
+            # members than workers would dispatch at argmin(all-inf) = inf
+            raise ValueError(
+                f"flight={self.flight} needs distinct workers but the "
+                f"deployment has only num_workers={self.W}")
+        self.rho = float(rho)
+        self.load = load
+        self.slat = float(stream_latency_ms)
+        self.seed = int(seed)
+        self.rate_hz = float(
+            arrival_rate_hz if arrival_rate_hz is not None
+            else _rate_for_load(wl.work_est_ws, self.W, load))
+        ha = self.A > 1
+        self.oh_mu, self.oh_sigma = lognormal_params(
+            *OverheadModel.TABLE[(ha, load)])
+        # static manifest prep (host-side numpy)
+        self._seq = _member_sequences(wl, self.flight)
+        self._dep = _dep_mask(wl.tasks, wl.deps)
+        s_tasks, s_means, s_deps = wl.stock_graph()
+        self._sdep = _dep_mask(s_tasks, s_deps)
+        self._stopo = _topo_order(self._sdep)
+        self._smeans = np.asarray(s_means, dtype=np.float32)
+        self._sextras = np.asarray(wl.stock_extras(), dtype=np.float32)
+
+    # -- compiled runners ------------------------------------------------
+    def _raptor_fn(self, jobs: int, n_configs: int = 0):
+        return _raptor_runner(
+            int(jobs), self.W, self.A, self.flight, len(self.wl.tasks),
+            tuple(map(tuple, self._seq.tolist())),
+            tuple(map(tuple, self._dep.tolist())),
+            self.wl.dist, self.wl.fail_prob, n_configs)
+
+    def _stock_fn(self, jobs: int, n_configs: int = 0):
+        return _stock_runner(
+            int(jobs), self.W, len(self._smeans), self._stopo,
+            tuple(map(tuple, self._sdep.tolist())),
+            self.wl.dist, self.wl.fail_prob, n_configs)
+
+    def _raptor_args(self):
+        wl = self.wl
+        return (self.rate_hz, self.rho,
+                jnp.asarray(wl.task_means, dtype=jnp.float32), wl.offset_ms,
+                wl.cv, wl.raptor_stage_ms, self.slat,
+                self.oh_mu, self.oh_sigma)
+
+    def _stock_args(self):
+        wl = self.wl
+        return (self.rate_hz, self.rho, jnp.asarray(self._smeans),
+                jnp.asarray(self._sextras), wl.offset_ms, wl.cv,
+                wl.stock_stage_ms, self.oh_mu, self.oh_sigma)
+
+    def _keys(self, trials: int, raptor: bool):
+        base = jax.random.PRNGKey(self.seed * 2 + (1 if raptor else 0))
+        return jax.random.split(base, trials)
+
+    def run(self, jobs: int = 1024, trials: int = 16, *,
+            raptor: bool = True) -> QueueResult:
+        if raptor:
+            fn = self._raptor_fn(jobs)
+            resp, ok = fn(self._keys(trials, True), *self._raptor_args())
+        else:
+            fn = self._stock_fn(jobs)
+            resp, ok = fn(self._keys(trials, False), *self._stock_args())
+        return QueueResult(resp, ok, raptor)
+
+    def run_pair(self, jobs: int = 1024, trials: int = 16) -> Dict[str, dict]:
+        stock = self.run(jobs, trials, raptor=False)
+        rap = self.run(jobs, trials, raptor=True)
+        out = {"stock": stock.summary(), "raptor": rap.summary()}
+        out["mean_ratio"] = out["raptor"]["mean"] / out["stock"]["mean"]
+        return out
+
+
+# --------------------------------------------------------------------------
+# batched config sweeps: vmap over (arrival rate, rho, overhead regime)
+# --------------------------------------------------------------------------
+
+def _pair_sweep(sims, jobs: int, trials: int):
+    """Run stock+raptor for a list of same-deployment sims in ONE
+    compilation per mode: arrival rate and the Table-6 overhead lognormal
+    are traced, so the config axis is just a ``vmap`` — adding a point
+    costs milliseconds, not a recompile."""
+    s0 = sims[0]
+    rates = jnp.array([s.rate_hz for s in sims])
+    mus = jnp.array([s.oh_mu for s in sims])
+    sigmas = jnp.array([s.oh_sigma for s in sims])
+
+    r_fn = s0._raptor_fn(jobs, n_configs=len(sims))
+    (_, _, means, offset, cv, stage_oh, slat, _, _) = s0._raptor_args()
+    r_resp, r_ok = r_fn(s0._keys(trials, True), rates, s0.rho, means,
+                        offset, cv, stage_oh, slat, mus, sigmas)
+
+    s_fn = s0._stock_fn(jobs, n_configs=len(sims))
+    (_, _, smeans, sextras, soffset, scv, sstage, _, _) = s0._stock_args()
+    s_resp, s_ok = s_fn(s0._keys(trials, False), rates, s0.rho, smeans,
+                        sextras, soffset, scv, sstage, mus, sigmas)
+
+    out = []
+    for i in range(len(sims)):
+        rap = QueueResult(r_resp[i], r_ok[i], True)
+        stock = QueueResult(s_resp[i], s_ok[i], False)
+        res = {"stock": stock.summary(), "raptor": rap.summary()}
+        res["mean_ratio"] = res["raptor"]["mean"] / res["stock"]["mean"]
+        out.append(res)
+    return out
+
+
+def load_sweep(wl: QueueWorkload, *, num_workers: int = 15, num_azs: int = 3,
+               loads=("low", "medium", "high"), rho: float = 0.95,
+               jobs: int = 1024, trials: int = 16,
+               seed: int = 0) -> Dict[str, dict]:
+    """All Table-6 load points of one deployment, one compile per mode."""
+    sims = [QueueFlightSim(wl, num_workers=num_workers, num_azs=num_azs,
+                           load=load, rho=rho, seed=seed) for load in loads]
+    return dict(zip(loads, _pair_sweep(sims, jobs, trials)))
+
+
+def rate_sweep(wl: QueueWorkload, rates_hz, *, loads=None,
+               num_workers: int = 15, num_azs: int = 3, rho: float = 0.95,
+               jobs: int = 1024, trials: int = 16, seed: int = 0):
+    """Arbitrary arrival-rate grid (continuous load axis) on one
+    deployment; ``loads`` optionally names the Table-6 overhead regime per
+    point (defaults to "medium").  Returns one pair dict per rate."""
+    loads = list(loads) if loads is not None else ["medium"] * len(rates_hz)
+    sims = [QueueFlightSim(wl, num_workers=num_workers, num_azs=num_azs,
+                           load=load, rho=rho, arrival_rate_hz=float(r),
+                           seed=seed)
+            for r, load in zip(rates_hz, loads)]
+    return _pair_sweep(sims, jobs, trials)

@@ -10,6 +10,15 @@ from __future__ import annotations
 from repro.sim.cluster import Cluster
 from repro.sim.flights import SimWorkload
 
+# load levels as utilisation targets of the flight variant's capacity —
+# shared by the scalar experiment drivers and the vectorized queue engine
+UTIL = {"low": 0.18, "medium": 0.45, "high": 0.75}
+
+
+def arrival_rate_hz(work_est_ws: float, num_workers: int, load: str) -> float:
+    """Poisson arrival rate hitting the UTIL[load] utilisation target."""
+    return UTIL[load] * num_workers / work_est_ws
+
 # ---- ssh-keygen: two entropy-bound tasks, flight of 2 (Table 8) ----------
 # lognormal(mean 875 ms, cv 1.45) + 40 ms offset: fit to the STOCK column of
 # Table 7 (gives 1399/936/2885 vs paper 1335/939/2887); heavy tail matches

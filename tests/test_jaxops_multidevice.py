@@ -18,10 +18,10 @@ SCRIPT = textwrap.dedent("""
     import numpy as np
     from jax.sharding import PartitionSpec as P
     from repro.core.jaxops import first_finisher, k_of_n_mean, masked_mean
+    from repro.launch.mesh import make_mesh
     from repro.models.moe import shard_map
 
-    mesh = jax.make_mesh((4, 2), ("pod", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((4, 2), ("pod", "model"))
 
     # --- first_finisher: everyone adopts the min-latency member's value ---
     def member(lat, val):

@@ -1,0 +1,152 @@
+"""Closed-loop vectorized queue engine vs the scalar event-driven oracle.
+
+The scalar FlightSim is the trusted reproduction of the paper's tables; the
+batched M/G/c engine (sim/vector_queue.py) must agree with it on mean
+response and failure rate for the DAG manifests (wordcount, thumbnail) at
+low AND medium load, and its dependency-masked flight scan must replay an
+independent-task manifest identically to the open-loop scan it extends.
+"""
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import analytics as A  # noqa: E402
+from repro.sim.cluster import Cluster  # noqa: E402
+from repro.sim.experiments import HA, rate_for  # noqa: E402
+from repro.sim.flights import FlightSim  # noqa: E402
+from repro.sim.vector import _flight_trial  # noqa: E402
+from repro.sim.vector_queue import (QueueFlightSim, dag_flight_trial,  # noqa: E402
+                                    keygen_queue, load_sweep,
+                                    thumbnail_queue, wordcount_queue)
+from repro.sim.workloads import (keygen_workload, thumbnail_workload,  # noqa: E402
+                                 wordcount_workload)
+
+JOBS, TRIALS = 1024, 16
+
+
+def scalar_stats(wl_fn, *, raptor, load, seed=7, duration_s=1800.0):
+    wl = wl_fn()
+    sim = FlightSim(Cluster(seed=seed, **HA), wl, raptor=raptor,
+                    arrival_rate_hz=rate_for(wl, HA, load),
+                    duration_s=duration_s, load=load, seed=seed)
+    jobs = sim.run()
+    resp = np.array([j.response for j in jobs])
+    return {"mean": resp.mean(), "p50": np.percentile(resp, 50),
+            "p90": np.percentile(resp, 90),
+            "fail_rate": float(np.mean([not j.ok for j in jobs]))}
+
+
+# ------------------------------------------------------------------
+# DAG manifests against the oracle at low AND medium load (acceptance)
+# ------------------------------------------------------------------
+
+@pytest.mark.parametrize("qwl_fn,swl_fn", [
+    (wordcount_queue, wordcount_workload),
+    (thumbnail_queue, thumbnail_workload),
+])
+@pytest.mark.parametrize("load", ["low", "medium"])
+def test_dag_agrees_with_scalar(qwl_fn, swl_fn, load):
+    vec = QueueFlightSim(qwl_fn(), load=load, seed=0, **HA)
+    for raptor in (True, False):
+        s = scalar_stats(swl_fn, raptor=raptor, load=load)
+        v = vec.run(JOBS, TRIALS, raptor=raptor)
+        vs = v.summary()
+        assert vs["mean"] == pytest.approx(s["mean"], rel=0.08), (
+            f"raptor={raptor}: scalar {s['mean']:.0f}ms "
+            f"vs vector {vs['mean']:.0f}ms")
+        assert v.fail_rate() == pytest.approx(s["fail_rate"], abs=0.02)
+
+
+def test_dag_ratio_matches_paper_shape():
+    """fig7: wordcount's storage-hop short-circuit is the big win (~0.46),
+    thumbnail's data-path reuse a muted one (~0.9)."""
+    wc = QueueFlightSim(wordcount_queue(), load="medium", seed=0,
+                        **HA).run_pair(JOBS, TRIALS)
+    th = QueueFlightSim(thumbnail_queue(), load="medium", seed=0,
+                        **HA).run_pair(JOBS, TRIALS)
+    assert wc["mean_ratio"] == pytest.approx(0.46, abs=0.08)
+    assert th["mean_ratio"] == pytest.approx(0.92, abs=0.06)
+    assert wc["mean_ratio"] < th["mean_ratio"] < 1.0
+
+
+# ------------------------------------------------------------------
+# the dependency-masked scan degenerates to the open-loop scan
+# ------------------------------------------------------------------
+
+def test_dag_trial_matches_open_loop_on_independent_tasks():
+    """For a dep-free manifest with direct start, dag_flight_trial must
+    replay byte-for-byte what sim.vector's _flight_trial replays."""
+    rng = np.random.default_rng(3)
+    F = K = 3
+    seq = jnp.array([np.roll(np.arange(K), -m) for m in range(F)])
+    dep = jnp.zeros((K, K), dtype=bool)
+    f_open = jax.jit(lambda z, f, tj: _flight_trial(z, f, tj, seq, 0.5))
+    f_dag = jax.jit(lambda z, f, tj: dag_flight_trial(
+        z, f, tj, seq, dep, 0.5, direct_start=True))
+    for trial in range(50):
+        z = jnp.array(rng.exponential(900.0, (F, K)).astype(np.float32))
+        fail = jnp.array(rng.random((F, K)) < 0.2)
+        tj = jnp.array(rng.exponential(10.0, (F,)).astype(np.float32))
+        t0, ok0 = f_open(z, fail, tj)
+        t1, ok1, _ = f_dag(z, fail, tj)
+        assert bool(ok0) == bool(ok1), trial
+        assert float(t0) == pytest.approx(float(t1), rel=1e-6), trial
+
+
+def test_dag_trial_respects_dependencies():
+    """A chain manifest (a -> b -> c) can never finish faster than the sum
+    of its task times, no matter the flight size."""
+    rng = np.random.default_rng(5)
+    K, F = 3, 3
+    seq = jnp.array([[0, 1, 2]] * F)
+    dep = jnp.array([[False, False, False],
+                     [True, False, False],
+                     [False, True, False]])
+    z = jnp.array(rng.exponential(500.0, (F, K)).astype(np.float32))
+    fail = jnp.zeros((F, K), dtype=bool)
+    tj = jnp.zeros((F,))
+    t, ok, _ = dag_flight_trial(z, fail, tj, seq, dep, 0.5)
+    assert bool(ok)
+    critical = sum(float(jnp.min(z[:, j])) for j in range(K))
+    assert float(t) >= critical
+
+
+# ------------------------------------------------------------------
+# queue behaviour
+# ------------------------------------------------------------------
+
+def test_response_grows_with_load():
+    means = {}
+    for load in ("low", "medium", "high"):
+        sim = QueueFlightSim(keygen_queue(), load=load, seed=0, **HA)
+        means[load] = sim.run(JOBS, 8, raptor=True).summary()["mean"]
+    assert means["low"] < means["medium"] < means["high"]
+
+
+def test_failure_rate_survives_queueing():
+    """Error broadcast semantics are load-independent: the 1-(1-p^F)^K
+    form must hold in the contended regime too."""
+    sim = QueueFlightSim(keygen_queue(fail_prob=0.2), load="medium",
+                         seed=0, **HA)
+    r = sim.run(JOBS, TRIALS, raptor=True)
+    assert r.fail_rate() == pytest.approx(
+        A.raptor_failure_exact(0.2, 2), abs=0.02)
+    s = sim.run(JOBS, TRIALS, raptor=False)
+    assert s.fail_rate() == pytest.approx(A.forkjoin_failure(0.2, 2),
+                                          abs=0.02)
+
+
+def test_load_sweep_matches_single_runs():
+    """The config-vmapped sweep must reproduce per-config runs exactly
+    (same keys, same draws — the vmap is pure batching)."""
+    sweep = load_sweep(keygen_queue(), loads=("low", "medium"), jobs=512,
+                       trials=8, seed=0, **HA)
+    for load in ("low", "medium"):
+        solo = QueueFlightSim(keygen_queue(), load=load, seed=0,
+                              **HA).run_pair(512, 8)
+        assert sweep[load]["raptor"]["mean"] == pytest.approx(
+            solo["raptor"]["mean"], rel=1e-4)
+        assert sweep[load]["stock"]["mean"] == pytest.approx(
+            solo["stock"]["mean"], rel=1e-4)

@@ -58,6 +58,20 @@ def test_fig7_wordcount_and_thumbnail():
     assert 0.85 < th < 1.02, f"thumbnail muted-but-positive, got {th}"
 
 
+def test_scalar_engine_drivers_still_work():
+    """fig6/fig7 default to the vector engine; the scalar driver loops
+    remain the validation oracle and must keep producing the same result
+    shape and paper-shaped ratios (short window: smoke, not calibration)."""
+    out = fig6_scale_effect(duration_s=150.0, engine="scalar")
+    assert set(out) == {f"{d}/{l}"
+                       for d in ("one_az_5w", "three_az_15w")
+                       for l in ("low", "medium", "high")}
+    assert out["three_az_15w/medium"]["mean_ratio"] < 0.85
+    out7 = fig7_other_workloads(duration_s=150.0, engine="scalar")
+    assert out7["wordcount"]["mean_ratio"] < 0.65
+    assert 0.8 < out7["thumbnail"]["mean_ratio"] < 1.05
+
+
 def test_fig8_reliability():
     out = fig8_reliability(n_jobs_s=400.0)
     for key, row in out.items():
