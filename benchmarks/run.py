@@ -126,7 +126,9 @@ def bench_sim_vector(trials: int = 10000):
     * queue     — the closed-loop M/G/c engine (fig6 keygen, medium load),
                   cold vs warm compile recorded (persistent cache);
     * dag       — the wordcount DAG manifest through the dependency-masked
-                  flight scan, closed loop at medium load.
+                  flight scan, closed loop at medium load;
+    * queue-stock-taskfcfs — the task-granular stock replay (wordcount
+                  STOCK at util 0.75), ≥20x the scalar oracle.
 
     The metric is jobs/sec at matched job counts; results land in
     BENCH_sim.json so CI can gate on regressions (benchmarks/
@@ -223,6 +225,34 @@ def bench_sim_vector(trials: int = 10000):
     _row("sim_dag", d_wall * 1e6 / (d_jobs * d_trials),
          f"scalar={sn/ss:.0f}j/s_vector={d_tps:.0f}j/s"
          f"_speedup={d_tps/(sn/ss):.0f}x")
+
+    # ---- queue-stock-taskfcfs: the task-granular stock engine ----------
+    # wordcount STOCK at util 0.75 (load="high") — the regime the
+    # task-FCFS rewrite made faithful (tests/test_sim_queue.py pins the
+    # <10% mean/p99 agreement).  Benched at stock_extra_passes=0, the
+    # minimal scan-over-stage-depth configuration (also fidelity-tested);
+    # 256 jobs/trial keeps the queue in regime (~95s windows) while the
+    # sequential event scan stays short, and the trial axis carries the
+    # parallelism.
+    tf_jobs, tf_trials = 256, max(trials // 80, 24)
+    tfsim = QueueFlightSim(wordcount_queue(), load="high", seed=0,
+                           stock_extra_passes=0, **HA)
+    r = tfsim.run(tf_jobs, tf_trials, raptor=False)
+    tf_wall = best_of(
+        lambda: tfsim.run(tf_jobs, tf_trials,
+                          raptor=False).response_ms.block_until_ready())
+    tf_tps = tf_jobs * tf_trials / tf_wall
+    sn, ss = _scalar_jobs_per_s(wordcount_workload, HA, "high",
+                                min(tf_jobs * tf_trials, 4096),
+                                raptor=False)
+    record["queue_stock_taskfcfs"] = {
+        "vector_jobs": tf_jobs * tf_trials, "jobs_per_s": tf_tps,
+        "scalar_jobs_per_s": sn / ss, "speedup": tf_tps / (sn / ss),
+        "mean_ms": r.summary()["mean"],
+    }
+    _row("sim_stock_taskfcfs", tf_wall * 1e6 / (tf_jobs * tf_trials),
+         f"scalar={sn/ss:.0f}j/s_vector={tf_tps:.0f}j/s"
+         f"_speedup={tf_tps/(sn/ss):.0f}x_target>=20x")
 
     # ---- the fig6-equivalent load sweep (acceptance: >=50x) ------------
     s_jobs = 0

@@ -42,6 +42,23 @@ def raptor_speedup_prediction(num_tasks: int, flight: int) -> float:
     return t_raptor / t_base
 
 
+def raptor_plateau_prediction(num_tasks: int, flight: int) -> float:
+    """Corrected F>>K plateau: K * E[min_{F/K}] / E[max_K].
+
+    The paper's K*E[min_F]/E[max_K] form silently assumes all F members
+    race every task in lockstep.  Under the §3.3.3 shifted sequences (or
+    ANY admissible per-member order) the flight splits over the K tasks,
+    so only ~F/K members race a given task concurrently — the effective
+    race width is F/K, not F (EXPERIMENTS.md has the derivation; measured
+    0.198 vs corrected 0.167 vs paper 0.083 at F=16, K=2).  For F <= K
+    the split does not bind (finishers re-race the remaining tasks almost
+    immediately) and the paper's form stays the better model — this
+    function is the wide-flight asymptote, not a general replacement.
+    """
+    width = max(flight // num_tasks, 1)
+    return num_tasks * e_min_exp(width) / e_max_exp(num_tasks)
+
+
 def forkjoin_failure(p: float, n: int) -> float:
     return 1.0 - (1.0 - p) ** n
 

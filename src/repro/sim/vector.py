@@ -91,15 +91,25 @@ def reliability_vector(n_tasks: int, fail_prob: float) -> VectorWorkload:
 
 
 # --------------------------------------------------------------------------
-# on-device draw primitives
+# on-device draw primitives (shared with sim/vector_queue.py)
 # --------------------------------------------------------------------------
 
-def _service_draws(key, shape, mean, dist: str, cv):
+def unit_draws(key, shape, dist: str, cv):
+    """Unit-mean service draws: exp(1) or lognormal(mean=1, cv).
+
+    ``cv`` may be traced.  Both vectorized tiers (this open-loop module and
+    the closed-loop :mod:`repro.sim.vector_queue`) draw through this one
+    helper so the service-time model cannot silently diverge between them.
+    """
     if dist == "exp":
-        return mean * jax.random.exponential(key, shape)
+        return jax.random.exponential(key, shape)
     sigma2 = jnp.log1p(cv * cv)
-    mu = jnp.log(mean) - sigma2 / 2
+    mu = -sigma2 / 2
     return jnp.exp(mu + jnp.sqrt(sigma2) * jax.random.normal(key, shape))
+
+
+def _service_draws(key, shape, mean, dist: str, cv):
+    return mean * unit_draws(key, shape, dist, cv)
 
 
 def _overhead_draws(key, shape, med, p90):
@@ -341,6 +351,29 @@ def _stock_sweep_runner(trials, num_tasks, dist, fail_prob):
                                            0, 0)))
 
 
+def pow2_pad(n: int) -> int:
+    """Smallest power of two >= n — the pad-and-mask bucket width.
+
+    Shared by every batched sweep that pads a ragged config axis (flight
+    size here, event-stream length in the closed-loop tier): padding to the
+    next power of two keeps the masked-compute waste under 2x while letting
+    all configs in a bucket share one compilation.
+    """
+    return 1 << max(int(n) - 1, 0).bit_length()
+
+
+def bucket_by_pad(sizes):
+    """Group config indices by their pow2-padded size: {pad: [indices]}.
+
+    One XLA compilation per bucket; a single global pad would make every
+    small config pay for the largest one in the sweep.
+    """
+    buckets = {}
+    for i, n in enumerate(sizes):
+        buckets.setdefault(pow2_pad(n), []).append(i)
+    return buckets
+
+
 def sweep_pairs(wl: "VectorWorkload", configs, *, trials: int = 20_000,
                 seed: int = 0):
     """Run many (flight, num_azs, rho, load) points in ONE compile each for
@@ -362,12 +395,8 @@ def sweep_pairs(wl: "VectorWorkload", configs, *, trials: int = 20_000,
         return oh[(c["num_azs"] > 1, c["load"])]
 
     # bucket configs by padded flight size (next power of two): one compile
-    # per bucket, and the masked-member compute waste stays under 2x (a
-    # single global F_pad would make every small flight pay the largest)
-    buckets = {}
-    for i, c in enumerate(cfgs):
-        f_pad = 1 << max(c["flight"] - 1, 0).bit_length()
-        buckets.setdefault(f_pad, []).append(i)
+    # per bucket, and the masked-member compute waste stays under 2x
+    buckets = bucket_by_pad(c["flight"] for c in cfgs)
 
     rap = [None] * len(cfgs)
     for f_pad, idxs in sorted(buckets.items()):

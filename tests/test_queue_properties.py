@@ -1,0 +1,214 @@
+"""Property-based invariant tests for the vectorized queue engines.
+
+The closed-loop engine (sim/vector_queue.py) exposes its booking trace
+(``QueueFlightSim.trace_run``): per-task ``ready/start/fin/worker`` for the
+task-FCFS stock path, per-member ``dispatch/worker/release`` occupancy
+intervals for the raptor path.  Every headline number in the reproduction
+is a statistic of these schedules, so the schedules themselves must satisfy
+the queue invariants *pointwise*, not just on average:
+
+* no task starts before its ready time (stock) / no member dispatches
+  before its job arrives (raptor);
+* no worker runs two tasks at once (occupancy intervals are disjoint);
+* work conservation: an idle worker never coexists with a ready-but-waiting
+  task under FCFS (for raptor, excluding the waiting flight's own members —
+  placement is whole-flight atomic, see vector_queue.py);
+* makespan is monotone in worker count.
+
+Two tiers: ``hypothesis``-driven tests when the package is installed, and a
+seeded grid of the same invariant checks that runs on bare environments
+(the checks are shared helpers, so both tiers exercise identical logic).
+
+Seed convention (applies to every sim test module): all randomness flows
+from explicit integer seeds — ``QueueFlightSim(seed=...)`` derives its jax
+PRNG keys from the seed alone, so any failure reproduces bit-for-bit from
+the printed parameters.  Never construct a sim without passing ``seed``.
+"""
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+except ModuleNotFoundError:  # bare env: hypothesis tier skips, grid runs
+    from _hypothesis_compat import hypothesis, st
+
+from repro.sim.vector_queue import (QueueFlightSim, keygen_queue,  # noqa: E402
+                                    thumbnail_queue, wordcount_queue)
+
+# float32 schedules run to ~1e6 ms; 1e-3 ms absorbs the scatter round-trip
+EPS = 1e-3
+WORKLOADS = {"keygen": keygen_queue, "wordcount": wordcount_queue,
+             "thumbnail": thumbnail_queue}
+
+
+# ------------------------------------------------------------------
+# shared invariant checkers (used by both the hypothesis and grid tiers)
+# ------------------------------------------------------------------
+
+def assert_stock_invariants(tr, W):
+    """Task-FCFS invariants on a stock booking trace."""
+    for t in range(tr["arrival"].shape[0]):
+        r, s, f = (tr[k][t].ravel() for k in ("ready", "start", "fin"))
+        w = tr["worker"][t].ravel()
+        # the bounded fixed point must have materialized every ready time
+        assert np.all(np.isfinite(r)), f"trial {t}: unscheduled tasks"
+        # no task starts before its ready time
+        early = s < r - EPS
+        assert not early.any(), (
+            f"trial {t}: task starts {r[early] - s[early]}ms early")
+        # no worker runs two tasks at once
+        for wk in range(W):
+            iv = np.stack([s[w == wk], f[w == wk]], axis=1)
+            iv = iv[np.argsort(iv[:, 0])]
+            gap = iv[1:, 0] - iv[:-1, 1]
+            assert np.all(gap >= -EPS), (
+                f"trial {t}: worker {wk} double-booked by {-gap.min()}ms")
+        # work conservation: a waiting task implies every worker is busy
+        # for the whole wait (checked at the midpoint of the wait)
+        for i in np.where(s > r + EPS)[0]:
+            tt = 0.5 * (r[i] + s[i])
+            busy = np.unique(w[(s <= tt) & (f > tt)])
+            assert len(busy) == W, (
+                f"trial {t}: task {i} waits at {tt}ms while "
+                f"{W - len(busy)} workers idle")
+
+
+def assert_raptor_invariants(tr, W):
+    """Worker-occupancy invariants on a raptor placement trace."""
+    T, J, F = tr["dispatch"].shape
+    for t in range(T):
+        arr, d = tr["arrival"][t], tr["dispatch"][t]
+        w, rel = tr["worker"][t], tr["release"][t]
+        # a flight whose race ended before a member dispatched never took
+        # the worker: its occupancy interval is empty, not negative
+        end = np.maximum(d, rel)
+        # no member dispatches before its job arrives
+        assert np.all(d >= arr[:, None] - EPS), f"trial {t}"
+        # HA placement books distinct workers per flight
+        for j in range(J):
+            assert len(set(w[j])) == F, f"trial {t} job {j}: shared worker"
+        # no worker runs two members at once
+        for wk in range(W):
+            iv = np.stack([d[w == wk], end[w == wk]], axis=1)
+            iv = iv[np.argsort(iv[:, 0])]
+            gap = iv[1:, 0] - iv[:-1, 1]
+            assert np.all(gap >= -EPS), (
+                f"trial {t}: worker {wk} double-booked by {-gap.min()}ms")
+        # work conservation: a queued member implies every worker outside
+        # its own flight is busy for the whole wait (members exclude their
+        # flight's own workers — whole-flight atomic placement)
+        for j, m in zip(*np.where(d > arr[:, None] + EPS)):
+            tt = 0.5 * (arr[j] + d[j, m])
+            busy = set(w[(d <= tt) & (end > tt)])
+            idle = set(range(W)) - busy - set(w[j])
+            assert not idle, (
+                f"trial {t}: job {j} member {m} waits at {tt}ms "
+                f"while workers {sorted(idle)} idle")
+
+
+def makespans(wl_fn, W, A, load, seed, *, raptor, jobs=192, trials=4):
+    sim = QueueFlightSim(wl_fn(), num_workers=W, num_azs=A, load=load,
+                         seed=seed)
+    tr = sim.trace_run(jobs, trials, raptor=raptor)
+    return (tr["arrival"] + tr["response"]).max(axis=1)
+
+
+# ------------------------------------------------------------------
+# seeded grid tier (runs everywhere, incl. bare envs without hypothesis)
+# ------------------------------------------------------------------
+
+GRID = [
+    # (workload, num_workers, num_azs, load, seed)
+    ("keygen", 15, 3, "medium", 0),
+    ("keygen", 5, 1, "high", 1),          # saturated 1-AZ deployment
+    ("wordcount", 15, 3, "high", 2),      # staged DAG at util 0.75
+    ("wordcount", 6, 3, "medium", 3),
+    ("thumbnail", 15, 3, "high", 4),
+    ("thumbnail", 5, 1, "low", 5),
+]
+
+
+@pytest.mark.parametrize("wl,W,A,load,seed", GRID)
+@pytest.mark.parametrize("raptor", [False, True])
+def test_queue_invariants_grid(wl, W, A, load, seed, raptor):
+    sim = QueueFlightSim(WORKLOADS[wl](), num_workers=W, num_azs=A,
+                         load=load, seed=seed)
+    tr = sim.trace_run(192, 4, raptor=raptor)
+    if raptor:
+        assert_raptor_invariants(tr, W)
+    else:
+        assert_stock_invariants(tr, W)
+
+
+@pytest.mark.parametrize("wl", ["keygen", "wordcount"])
+@pytest.mark.parametrize("raptor", [False, True])
+def test_makespan_monotone_in_workers_grid(wl, raptor):
+    """Adding workers never lengthens the same arrival stream's makespan.
+
+    Stock is draw-coupled across worker counts (no W-shaped draws), so the
+    comparison is per-trial exact; raptor placement re-draws the AZ-shared
+    service block when W changes, so the coupling is statistical — the
+    small slack absorbs it.
+    """
+    slack = 1e-5 if not raptor else 0.05
+    for seed in (0, 1):
+        mk = {W: makespans(WORKLOADS[wl], W, 3, "high", seed,
+                           raptor=raptor) for W in (6, 9, 15)}
+        for lo, hi in ((6, 9), (9, 15)):
+            assert np.all(mk[hi] <= mk[lo] * (1 + slack)), (
+                f"seed {seed}: makespan grew {lo}->{hi} workers")
+
+
+def test_trace_matches_run():
+    """trace_run is the SAME replay as run (same keys): the responses it
+    reports must equal the measured ones bit-for-bit."""
+    sim = QueueFlightSim(wordcount_queue(), load="high", seed=6,
+                         num_workers=15, num_azs=3)
+    for raptor in (False, True):
+        tr = sim.trace_run(128, 3, raptor=raptor)
+        res = sim.run(128, 3, raptor=raptor)
+        np.testing.assert_array_equal(tr["response"],
+                                      np.asarray(res.response_ms))
+        # and the trace's own completion times reproduce the response
+        if not raptor:
+            resp = tr["fin"].max(axis=2) - tr["arrival"]
+            np.testing.assert_allclose(resp, tr["response"], rtol=1e-6)
+
+
+# ------------------------------------------------------------------
+# hypothesis tier (random deployments; skips when hypothesis is absent)
+# ------------------------------------------------------------------
+
+@hypothesis.given(
+    wl=st.sampled_from(sorted(WORKLOADS)),
+    W=st.integers(min_value=4, max_value=20),
+    A=st.integers(min_value=1, max_value=4),
+    load=st.sampled_from(["low", "medium", "high"]),
+    seed=st.integers(min_value=0, max_value=2**16),
+    raptor=st.booleans(),
+)
+@hypothesis.settings(max_examples=12, deadline=None)
+def test_queue_invariants_property(wl, W, A, load, seed, raptor):
+    sim = QueueFlightSim(WORKLOADS[wl](), num_workers=W, num_azs=A,
+                         load=load, seed=seed)
+    tr = sim.trace_run(96, 2, raptor=raptor)
+    if raptor:
+        assert_raptor_invariants(tr, W)
+    else:
+        assert_stock_invariants(tr, W)
+
+
+@hypothesis.given(
+    wl=st.sampled_from(sorted(WORKLOADS)),
+    seed=st.integers(min_value=0, max_value=2**16),
+    raptor=st.booleans(),
+)
+@hypothesis.settings(max_examples=6, deadline=None)
+def test_makespan_monotone_property(wl, seed, raptor):
+    slack = 1e-5 if not raptor else 0.05
+    mk = {W: makespans(WORKLOADS[wl], W, 3, "high", seed, raptor=raptor,
+                       jobs=96, trials=2) for W in (6, 12)}
+    assert np.all(mk[12] <= mk[6] * (1 + slack))
