@@ -128,7 +128,11 @@ def bench_sim_vector(trials: int = 10000):
     * dag       — the wordcount DAG manifest through the dependency-masked
                   flight scan, closed loop at medium load;
     * queue-stock-taskfcfs — the task-granular stock replay (wordcount
-                  STOCK at util 0.75), ≥20x the scalar oracle.
+                  STOCK at util 0.75), ≥20x the scalar oracle;
+    * sweep-sharded — the closed-loop utilisation grid through the
+                  device-sharded SweepPlan driver (sim/sweeps.py), all
+                  (forced-host) devices vs one: ≥2x grid throughput on a
+                  4-device host, summaries bit-identical.
 
     The metric is jobs/sec at matched job counts; results land in
     BENCH_sim.json so CI can gate on regressions (benchmarks/
@@ -253,6 +257,56 @@ def bench_sim_vector(trials: int = 10000):
     _row("sim_stock_taskfcfs", tf_wall * 1e6 / (tf_jobs * tf_trials),
          f"scalar={sn/ss:.0f}j/s_vector={tf_tps:.0f}j/s"
          f"_speedup={tf_tps/(sn/ss):.0f}x_target>=20x")
+
+    # ---- sweep-sharded: the config grid over the device mesh -----------
+    # The closed-loop utilisation grid through the SweepPlan driver
+    # (sim/sweeps.py), config axis sharded over every (forced-host)
+    # device vs pinned to one.  The closed-loop event scans are tiny-op
+    # dispatch-bound work XLA cannot intra-op-parallelize, so this is
+    # where device sharding pays near-linearly; the open-loop cores
+    # already saturate the host on one device, so the sweep_scale grid
+    # is checked for sharded == single-device summaries instead (the
+    # shard axis is pure batching — results must be bit-identical).
+    from repro.sim.vector_queue import rate_sweep
+    n_dev = jax.device_count()
+    wl_q = keygen_queue()
+    utils = [0.1 + 0.75 * i / 11 for i in range(12)]
+    rates = [u * HA["num_workers"] / wl_q.work_est_ws for u in utils]
+    sh_jobs, sh_trials = max(trials // 16, 256), 16
+
+    def sweep_grid(devices):
+        return rate_sweep(wl_q, rates, num_workers=HA["num_workers"],
+                          num_azs=HA["num_azs"], jobs=sh_jobs,
+                          trials=sh_trials, seed=0, devices=devices)
+
+    one = sweep_grid(1)               # compile outside the timed window
+    sharded = sweep_grid(None)
+    one_wall = best_of(lambda: sweep_grid(1))
+    sh_wall = best_of(lambda: sweep_grid(None))
+    grid_jobs = len(rates) * sh_jobs * sh_trials * 2
+    from repro.sim.vector import exponential_vector, sweep_pairs
+    scale_grid = ([dict(flight=4, num_azs=a) for a in (1, 2, 3, 4, 6, 8)]
+                  + [dict(flight=f, num_azs=8) for f in (2, 4, 8, 16)])
+    wl_o = exponential_vector(2, 1000.0)
+    sc_trials = min(trials, 4000)
+    scale_match = (
+        sweep_pairs(wl_o, scale_grid, trials=sc_trials, seed=0, devices=1)
+        == sweep_pairs(wl_o, scale_grid, trials=sc_trials, seed=0,
+                       devices=None))
+    record["sweep_sharded"] = {
+        "devices": n_dev, "grid_points": len(rates),
+        "vector_jobs": grid_jobs,
+        "jobs_per_s": grid_jobs / sh_wall,
+        "jobs_per_s_1dev": grid_jobs / one_wall,
+        "multiplier": one_wall / sh_wall,
+        "summaries_match": bool(one == sharded),
+        "scale_grid_summaries_match": bool(scale_match),
+    }
+    _row("sim_sweep_sharded", sh_wall * 1e6 / grid_jobs,
+         f"1dev={grid_jobs/one_wall:.0f}j/s_sharded={grid_jobs/sh_wall:.0f}j/s"
+         f"_x{one_wall/sh_wall:.2f}_devices={n_dev}"
+         f"_match={bool(one == sharded)}_scale_match={bool(scale_match)}"
+         f"_target>=2x_on_4dev")
 
     # ---- the fig6-equivalent load sweep (acceptance: >=50x) ------------
     s_jobs = 0
@@ -385,6 +439,11 @@ def main() -> None:
     # must not make a bare interpreter crash here
     if any(t in jax_tier or t in ("fig6", "fig7") for t in targets):
         try:
+            # multi-controller sweeps on CPU-only hosts: split the host
+            # into 4 devices BEFORE the backend initializes (no-op when
+            # XLA_FLAGS already forces a count, e.g. in CI)
+            from repro.sim.sweeps import force_host_devices
+            force_host_devices(4)
             enable_compile_cache()
         except ImportError:
             pass                  # numpy-only: scalar fallbacks still run

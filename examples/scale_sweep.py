@@ -9,11 +9,16 @@ racing replicas buys nothing; as AZs are added the members decorrelate and
 the measured ratio converges to the order-statistics prediction.
 
 Runs in seconds: every configuration is a vectorized on-device Monte-Carlo
-batch (sim/vector.py), not the scalar event loop.
+batch (sim/vector.py), not the scalar event loop — and the closed-loop
+load curve at the bottom runs through the device-sharded sweep driver
+(sim/sweeps.py): on a CPU-only host the process is split into 4 forced
+host devices and the utilisation grid shards over them (bit-identical to
+the single-device run, just faster).
 
     PYTHONPATH=src python examples/scale_sweep.py
 """
 from repro.core.analytics import raptor_speedup_prediction
+from repro.sim.sweeps import force_host_devices
 from repro.sim.vector import (VectorFlightSim, exponential_vector,
                               keygen_vector)
 
@@ -26,7 +31,12 @@ SEED = 0
 
 
 def main():
+    # split a CPU-only host into 4 devices for the sharded sweep path;
+    # must run before the first jax dispatch (no-op afterwards / on
+    # multi-chip hosts — returns the live device count either way)
+    n_dev = force_host_devices(4)
     theory = raptor_speedup_prediction(num_tasks=2, flight=FLIGHT)
+    print(f"sweep device mesh: {n_dev} device(s)")
     print(f"exp(1) tasks, flight of {FLIGHT}, rho=0.95, {TRIALS} trials/point")
     print(f"independent-exponential prediction: ratio = {theory:.3f}\n")
     print(f"{'AZs':>4} {'stock mean':>11} {'raptor mean':>12} "

@@ -113,6 +113,50 @@ def summarize_batch(samples):
     }
 
 
+def summarize_masked_batch(samples, ok):
+    """Success-conditioned :func:`summarize_batch`, safe under jit/vmap.
+
+    Failed jobs' "responses" are failure-detection times, not delays, so
+    delay statistics condition on ``ok``; the failure accounting rides
+    alongside (``fail_rate`` over everything, ``n_failed`` explicit).
+    Masked percentiles sort with failures pushed to +inf and interpolate
+    over the first ``n_ok`` order statistics (numpy's linear rule), so a
+    device-sharded sweep can reduce every config's summary on-device and
+    ship scalars home instead of raw sample batches.  With ``n_ok == 0``
+    the delay stats come back NaN and ``n`` is 0, mirroring the host-side
+    summaries.
+    """
+    import jax.numpy as jnp
+    a = jnp.asarray(samples).ravel()
+    if not jnp.issubdtype(a.dtype, jnp.floating):
+        a = a.astype(jnp.float32)
+    m = jnp.asarray(ok, dtype=bool).ravel()
+    n_ok = jnp.sum(m)
+    denom = jnp.maximum(n_ok, 1)
+    s = jnp.sort(jnp.where(m, a, jnp.inf))
+    nan = jnp.float32(jnp.nan)
+
+    def q(p):
+        idx = p / 100.0 * (denom - 1)
+        lo = jnp.clip(jnp.floor(idx).astype(jnp.int32), 0, a.size - 1)
+        hi = jnp.clip(jnp.ceil(idx).astype(jnp.int32), 0, a.size - 1)
+        w = (idx - lo).astype(s.dtype)
+        return jnp.where(n_ok > 0, s[lo] * (1 - w) + s[hi] * w, nan)
+
+    mean = jnp.where(n_ok > 0, jnp.sum(jnp.where(m, a, 0.0)) / denom, nan)
+    var = jnp.sum(jnp.where(m, (a - mean) ** 2, 0.0)) / denom
+    return {
+        "mean": mean,
+        "median": q(50.0),
+        "p90": q(90.0),
+        "p99": q(99.0),
+        "scv": var / (mean * mean + 1e-12),
+        "n": n_ok,
+        "fail_rate": 1.0 - n_ok / a.size,
+        "n_failed": a.size - n_ok,
+    }
+
+
 def emp_min_mean(z, axis: int = -1):
     """E[min] estimate: mean over the batch of the min over ``axis``."""
     import jax.numpy as jnp

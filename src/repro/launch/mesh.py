@@ -29,6 +29,20 @@ def make_production_mesh(*, multi_pod: bool = False):
     return make_mesh(shape, axes)
 
 
+def make_config_mesh(devices=None):
+    """1-D ``("config",)`` mesh — the sweep driver's multi-controller axis.
+
+    ``sim/sweeps.py`` shards config-grid sweeps over this mesh; on CPU-only
+    hosts the devices come from ``--xla_force_host_platform_device_count``
+    (``sim.sweeps.force_host_devices``), so the same code path runs on a
+    multi-chip pod and a GitHub runner.  Built from an explicit device list
+    (``jax.make_mesh`` has no devices knob on older releases).
+    """
+    import numpy as np
+    devs = list(devices) if devices is not None else jax.devices()
+    return jax.sharding.Mesh(np.asarray(devs), ("config",))
+
+
 def make_host_mesh(data: int = 1, model: int = 1):
     """Small mesh over whatever devices exist (CPU tests / examples)."""
     n = len(jax.devices())

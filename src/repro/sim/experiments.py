@@ -22,10 +22,33 @@ def rate_for(wl, deployment: Dict, load: str) -> float:
     return arrival_rate_hz(wl.work_est_ws, deployment["num_workers"], load)
 
 
+def summarize_jobs(jobs) -> dict:
+    """Delay summary conditioned on SUCCESS, failure accounting alongside.
+
+    A failed job's "response" is the failure-*detection* time (when the
+    last member gave up), not a delay a client would see — mixing those
+    into ``summarize`` biases the raptor delay means/tails whenever
+    ``fail_prob > 0``.  ``n`` counts the successful jobs summarized;
+    ``fail_rate`` is still over ALL jobs and ``n_failed`` is reported so
+    nothing is silently dropped.  The vectorized engines' ``summary()``
+    follows the same convention.
+    """
+    ok = [j.response for j in jobs if j.ok]
+    if ok:
+        s = summarize(ok)
+    else:
+        nan = float("nan")
+        s = dict(mean=nan, median=nan, p90=nan, p99=nan, scv=nan, n=0)
+    s["fail_rate"] = float(np.mean([not j.ok for j in jobs])) if jobs else 0.0
+    s["n_failed"] = int(sum(not j.ok for j in jobs))
+    return s
+
+
 def run_pair(wl_fn, deployment: Dict, *, load: str = "medium",
              duration_s: float = 1800.0, seed: int = 0,
              rho: float = 0.95, rotate: bool = True) -> Dict[str, dict]:
-    """Simulate a workload with and without Raptor; returns summary stats."""
+    """Simulate a workload with and without Raptor; returns summary stats
+    (delay stats success-conditioned, see :func:`summarize_jobs`)."""
     out = {}
     for raptor in (False, True):
         cl = Cluster(rho=rho, seed=seed, **deployment)
@@ -35,9 +58,8 @@ def run_pair(wl_fn, deployment: Dict, *, load: str = "medium",
                         duration_s=duration_s, load=load, seed=seed,
                         rotate=rotate)
         jobs = sim.run()
-        s = summarize([j.response for j in jobs])
+        s = summarize_jobs(jobs)
         s["work_mean"] = float(np.mean([j.work_ms for j in jobs]))
-        s["fail_rate"] = float(np.mean([not j.ok for j in jobs]))
         out["raptor" if raptor else "stock"] = s
     out["mean_ratio"] = out["raptor"]["mean"] / out["stock"]["mean"]
     return out
@@ -107,9 +129,8 @@ def fig6_scale_effect(seed: int = 0, duration_s: float = 1800.0,
                 sim = FlightSim(cl, keygen_workload(), raptor=raptor,
                                 arrival_rate_hz=hz, duration_s=duration_s,
                                 load=load, seed=seed)
-                jobs_done = sim.run()
-                res["raptor" if raptor else "stock"] = summarize(
-                    [j.response for j in jobs_done])
+                res["raptor" if raptor else "stock"] = summarize_jobs(
+                    sim.run())
             res["mean_ratio"] = res["raptor"]["mean"] / res["stock"]["mean"]
             out[f"{name}/{load}"] = res
     return out
@@ -153,18 +174,22 @@ def fig7_other_workloads(seed: int = 0, duration_s: float = 1800.0,
 
 
 def load_sweep_util(utils=(0.15, 0.3, 0.45, 0.6, 0.75, 0.9), seed: int = 0,
-                    jobs: int = 1024, trials: int = 16) -> Dict:
+                    jobs: int = 1024, trials: int = 16,
+                    devices=None) -> Dict:
     """Closed-loop keygen ratio across a *continuous* utilisation grid.
 
-    The arrival rate is a traced argument of the queue engine, so the whole
-    grid is one vmapped call per deployment — the fig6 curve at arbitrary
-    resolution (a regime the scalar sim cannot sweep in reasonable time).
-    Overheads use the Table-6 regime nearest each utilisation.  The 0.9
-    point probes deep into the queueing regime the task-FCFS stock engine
-    made faithful; note the 1-AZ/5-worker deployment is saturated by the
-    flights there (raptor util > 1) — its window-length-dependent numbers
-    are only comparable as backlog growth rates (tests/test_sim_queue.py's
-    saturation test), not as steady-state means.
+    A thin plan over the device-sharded sweep driver (sim/sweeps.py): the
+    arrival rate is a traced argument of the queue engine, so the whole
+    grid per deployment is one compilation with the utilisation axis
+    sharded over ``devices`` (default: every jax device) — the fig6 curve
+    at arbitrary resolution (a regime the scalar sim cannot sweep in
+    reasonable time).  Overheads use the Table-6 regime nearest each
+    utilisation.  The 0.9 point probes deep into the queueing regime the
+    task-FCFS stock engine made faithful; note the 1-AZ/5-worker
+    deployment is saturated by the flights there (raptor util > 1) — its
+    window-length-dependent numbers are only comparable as backlog growth
+    rates (tests/test_sim_queue.py's saturation test), not as steady-state
+    means.
     """
     from repro.sim.vector_queue import keygen_queue, rate_sweep
     out: Dict[str, dict] = {}
@@ -176,13 +201,13 @@ def load_sweep_util(utils=(0.15, 0.3, 0.45, 0.6, 0.75, 0.9), seed: int = 0,
         res = rate_sweep(wl, rates, loads=loads,
                          num_workers=dep["num_workers"],
                          num_azs=dep["num_azs"], jobs=jobs, trials=trials,
-                         seed=seed)
+                         seed=seed, devices=devices)
         for u, pair in zip(utils, res):
             out[f"{name}/util{u:.2f}"] = pair
     return out
 
 
-def sweep_scale(trials: int = 20000, seed: int = 0) -> Dict:
+def sweep_scale(trials: int = 20000, seed: int = 0, devices=None) -> Dict:
     """Vectorized Monte-Carlo sweep across cluster scale (the tentpole).
 
     Covers the scalar drivers' Table 7/8 territory and extends it with the
@@ -190,6 +215,9 @@ def sweep_scale(trials: int = 20000, seed: int = 0) -> Dict:
     as the deployment grows 1→8 AZs and flights grow 2→16 members.  All
     trials and order-statistics reductions run on-device (sim/vector.py +
     core/analytics.py); the scalar FlightSim remains the agreement oracle.
+    The AZ/flight grid goes through the device-sharded sweep driver
+    (``devices`` as in :func:`repro.sim.vector.sweep_pairs`; sharded runs
+    are bit-identical to single-device ones, tests/test_sweeps.py).
     """
     from repro.core.analytics import (raptor_plateau_prediction,
                                       raptor_speedup_prediction)
@@ -216,7 +244,8 @@ def sweep_scale(trials: int = 20000, seed: int = 0) -> Dict:
     az_points = [dict(flight=4, num_azs=a) for a in (1, 2, 3, 4, 6, 8)]
     fl_points = [dict(flight=f, num_azs=8) for f in (2, 4, 8, 16)]
     wl = exponential_vector(2, 1000.0)
-    res = sweep_pairs(wl, az_points + fl_points, trials=trials, seed=seed)
+    res = sweep_pairs(wl, az_points + fl_points, trials=trials, seed=seed,
+                      devices=devices)
     az_res, fl_res = res[:len(az_points)], res[len(az_points):]
     out["az_sweep"] = {
         "ratio_by_azs": {c["num_azs"]: r["mean_ratio"]

@@ -13,6 +13,21 @@ been broadcast, and are preempted mid-task when a peer finishes first —
 their worker is freed after the half-RTT stream latency (§3.3.4).  Member
 task failures degrade the flight; the job fails only if every member fails
 (Figure 8's p^N).
+
+Job-accounting conventions (shared with the vectorized engines so
+agreement tests compare like with like — see sim/vector_queue.py):
+
+* horizon drain: arrivals stop at ``duration_s`` but the event queue
+  drains past it, so jobs still in flight at the horizon run to
+  completion instead of being censored (dropping them biases the
+  high-load tails low — the in-flight jobs are exactly the slow ones);
+* dependency waits are event-driven: a member whose next task has an
+  unmet dependency parks and is re-woken one stream half-RTT after the
+  unblocking completion broadcast (any ``stream_latency_ms`` >= 0 is
+  honored exactly — there is no poll floor);
+* a flight that can never progress (every attempt of some dependency
+  errored) terminates with ``ok=False`` at its last event, so every
+  admitted job is returned, successful or not.
 """
 from __future__ import annotations
 
@@ -90,12 +105,27 @@ class FlightSim:
 
     # ------------------------------------------------------------------
     def run(self) -> List[JobRecord]:
+        """Replay the arrival stream; returns ONE record per admitted job.
+
+        Horizon-drain semantics: arrivals stop at the horizon, but the
+        event queue drains past it so every admitted job runs to
+        completion — nothing is censored.  Flights that can never progress
+        (deadlocked on errored dependencies) fail at their last event
+        (``_check_deadlock``); the rare cross-flight stall — parked
+        members of partially-joined flights holding every worker — is
+        resolved after the drain by failing the stuck jobs at the stall
+        instant rather than silently dropping them.
+        """
         t = float(self.rng.exponential(1000.0 / self.lam))
         while t < self.duration_ms:
             self.q.schedule(t, self._arrive)
             t += float(self.rng.exponential(1000.0 / self.lam))
         self.q.run()
-        return [j for j in self.jobs if j.t_done >= 0]
+        for j in self.jobs:
+            if j.t_done < 0:
+                j.t_done = self.q.now
+                j.ok = False
+        return self.jobs
 
     def _arrive(self):
         rec = JobRecord(t_arrive=self.q.now)
@@ -110,6 +140,8 @@ class FlightSim:
                 "done": {}, "running": {},
                 "released": set(), "failed_members": set(),
                 "n_members": 0,
+                # event-driven dependency waits + deadlock detection
+                "parked": set(), "done_members": set(), "pending": 0,
             }
             for m in range(max(self.wl.concurrency, 1)):
                 oh = overhead if m == 0 else overhead + float(
@@ -191,7 +223,36 @@ class FlightSim:
         fl["seq_idx"][w] = member_idx % len(self._seqs)
         fl["ptr"][w] = 0
         fl["n_members"] += 1
-        self.q.schedule(self.q.now + overhead, self._member_next, fl, w)
+        self._wake(fl, w, overhead)
+
+    def _wake(self, fl, w, delay: float):
+        """Schedule a member continuation, counted in ``fl["pending"]`` so
+        deadlock detection can tell 'quiescent' from 'wake in flight'."""
+        fl["pending"] += 1
+        self.q.schedule(self.q.now + delay, self._member_wake, fl, w)
+
+    def _member_wake(self, fl, w):
+        fl["pending"] -= 1
+        self._member_next(fl, w)
+
+    def _check_deadlock(self, fl):
+        """Fail the flight the moment no member can ever progress: every
+        joined member parked on an unmet dependency or out of tasks, no
+        attempt running, no wake pending, and the whole flight joined.
+        (Without this, members parked on a dependency whose every attempt
+        errored would wait forever and the event queue would never drain —
+        the job could not even be *observed* as censored.)  Subsumes the
+        old every-member-exhausted check: that is the ``parked``-empty
+        special case."""
+        if (fl["rec"].t_done < 0 and not fl["running"]
+                and fl["pending"] == 0
+                and fl["n_members"] >= max(self.wl.concurrency, 1)
+                and len(fl["parked"]) + len(fl["done_members"])
+                >= fl["n_members"]
+                and len(fl["done"]) < len(self.wl.tasks)):
+            fl["rec"].t_done = self.q.now
+            fl["rec"].ok = False
+            self._finish_flight(fl)
 
     def _exec_sequence(self, index: int) -> List[str]:
         from repro.core.dag import execution_sequence
@@ -214,23 +275,23 @@ class FlightSim:
                 continue
             if all(d in fl["done"] for d in self.wl.deps[task]):
                 break
-            # dependency not yet visible on the stream: poll after a hop
+            # dependency not yet visible on the stream: park until a
+            # completion broadcast re-wakes us half an RTT later.  Event-
+            # driven, not polled — the old max(slat, 0.1)ms poll both
+            # busy-polled and quantized sub-0.1ms stream latencies away
+            # from the vector scan's exact broadcast+slat wake.
             fl["ptr"][w] = ptr
-            self.q.schedule(self.q.now + max(self.slat, 0.1),
-                            self._member_next, fl, w)
+            fl["parked"].add(w)
+            self._check_deadlock(fl)
             return
         fl["ptr"][w] = ptr
         if ptr >= len(seq):
-            fl.setdefault("done_members", set()).add(w)
+            # member exhausted its sequence; the job fails once NO member
+            # can make progress with tasks still incomplete (all attempts
+            # of some task errored) — _check_deadlock's terminal case
+            fl["done_members"].add(w)
             self._release_member(fl, w)
-            # job fails once every member has exhausted its sequence with
-            # tasks still incomplete (all attempts of some task errored)
-            if (len(fl["done_members"]) >= max(self.wl.concurrency, 1)
-                    and len(fl["done"]) < len(self.wl.tasks)
-                    and fl["rec"].t_done < 0):
-                fl["rec"].t_done = self.q.now
-                fl["rec"].ok = False
-                self._finish_flight(fl)
+            self._check_deadlock(fl)
             return
         task = seq[ptr]
         svc = fl["draws"].draw(task, w)
@@ -248,7 +309,7 @@ class FlightSim:
             # §3.3.4: the error event is broadcast and IGNORED by peers; the
             # member moves on.  The task stays pending for other members.
             fl["failed_members"].add(w)
-            self.q.schedule(self.q.now, self._member_next, fl, w)
+            self._wake(fl, w, 0.0)
             return
         if task not in fl["done"]:
             fl["done"][task] = self.q.now
@@ -259,14 +320,19 @@ class FlightSim:
                     fl["running"].pop(pw)
                     fl["rec"].work_ms += (self.q.now + self.slat) - pt0
                     fl["ptr"][pw] += 0
-                    self.q.schedule(self.q.now + self.slat,
-                                    self._member_next, fl, pw)
+                    self._wake(fl, pw, self.slat)
+            # ...and wake members parked on a dependency: they re-check
+            # their head-of-line task half an RTT after the broadcast
+            # (re-parking if still blocked) — the vector scan's semantics
+            for pw in list(fl["parked"]):
+                fl["parked"].discard(pw)
+                self._wake(fl, pw, self.slat)
         if len(fl["done"]) == len(self.wl.tasks):
             fl["rec"].t_done = self.q.now
             fl["rec"].ok = True
             self._finish_flight(fl)
             return
-        self.q.schedule(self.q.now, self._member_next, fl, w)
+        self._wake(fl, w, 0.0)
 
     def _finish_flight(self, fl):
         for pw, (ptask, eid, pt0) in list(fl["running"].items()):

@@ -16,10 +16,12 @@ M/G/c worker queues replayed over whole Poisson arrival streams, plus the
 DAG manifests (wordcount, thumbnail) via per-member dependency masks — so
 every load-dependent paper figure (fig6, fig7, Table 8 at real
 utilisation) also runs on-device.  Config sweeps are batched in both
-tiers: :func:`sweep_pairs` pads-and-masks over flight size and traces
-rho/AZ-count/overhead so a whole (flight x AZ x rho x load) grid shares a
-handful of compilations instead of paying ~1.5s of XLA compile per point
-(BENCH_sim.json), and ``sequences="random"`` swaps the §3.3.3 cyclic
+tiers and routed through the device-sharded driver in
+:mod:`repro.sim.sweeps`: :func:`sweep_pairs` pads-and-masks over flight
+size and traces rho/AZ-count/overhead so a whole (flight x AZ x rho x
+load) grid shares a handful of compilations instead of paying ~1.5s of
+XLA compile per point (BENCH_sim.json), with the config axis sharded over
+the jax device mesh, and ``sequences="random"`` swaps the §3.3.3 cyclic
 shifts for per-trial random orders (the ROADMAP F>>K paper-gap probe).
 The scalar sim remains the oracle: ``tests/test_sim_vector.py`` and
 ``tests/test_sim_queue.py`` check seeded agreement on mean response,
@@ -50,8 +52,7 @@ import numpy as np
 from jax import lax
 
 from repro.core.analytics import (flight_fail_rate_batch,
-                                  forkjoin_fail_rate_batch,
-                                  response_ratio_batch, summarize_batch)
+                                  forkjoin_fail_rate_batch, summarize_batch)
 from repro.sim.cluster import OverheadModel, lognormal_params
 from repro.sim.workloads import (KEYGEN_CV, KEYGEN_MEAN_MS, KEYGEN_OFFSET_MS,
                                  RELIABILITY_CV, RELIABILITY_MEAN_MS)
@@ -331,26 +332,6 @@ def _stock_sweep_core(key, rho, mean, offset, cv, oh_mu, oh_sigma, *,
     return t_resp, ok, fail
 
 
-@functools.lru_cache(maxsize=None)
-def _raptor_sweep_runner(trials, flight_max, num_tasks, azs_max, dist,
-                         fail_prob):
-    core = functools.partial(
-        _raptor_sweep_core, trials=trials, flight_max=flight_max,
-        num_tasks=num_tasks, azs_max=azs_max, dist=dist,
-        fail_prob=fail_prob)
-    return jax.jit(jax.vmap(core, in_axes=(None, 0, 0, 0, None, None, None,
-                                           None, None, 0, 0)))
-
-
-@functools.lru_cache(maxsize=None)
-def _stock_sweep_runner(trials, num_tasks, dist, fail_prob):
-    core = functools.partial(_stock_sweep_core, trials=trials,
-                             num_tasks=num_tasks, dist=dist,
-                             fail_prob=fail_prob)
-    return jax.jit(jax.vmap(core, in_axes=(None, 0, None, None, None,
-                                           0, 0)))
-
-
 def pow2_pad(n: int) -> int:
     """Smallest power of two >= n — the pad-and-mask bucket width.
 
@@ -375,63 +356,22 @@ def bucket_by_pad(sizes):
 
 
 def sweep_pairs(wl: "VectorWorkload", configs, *, trials: int = 20_000,
-                seed: int = 0):
+                seed: int = 0, devices=None):
     """Run many (flight, num_azs, rho, load) points in ONE compile each for
     the raptor and stock paths.
 
     ``configs`` is a sequence of dicts with keys ``flight``, ``num_azs``,
     and optional ``rho`` (default 0.95) and ``load`` (default "medium").
     Returns one dict per config with stock/raptor summaries + mean ratio.
+
+    A thin plan over the device-sharded sweep driver: the bucketing and
+    pad-and-mask plumbing live in :mod:`repro.sim.sweeps`, and the config
+    axis shards over ``devices`` (default: every jax device) with results
+    bit-identical to the single-device run.
     """
-    cfgs = [dict(flight=int(c["flight"]), num_azs=int(c["num_azs"]),
-                 rho=float(c.get("rho", 0.95)),
-                 load=c.get("load", "medium")) for c in configs]
-    # Table-6 overhead regimes are keyed by (ha, load) — a 1-AZ config in
-    # the same sweep as HA configs must NOT inherit the HA overhead row
-    oh = {(c["num_azs"] > 1, c["load"]): lognormal_params(
-        *OverheadModel.TABLE[(c["num_azs"] > 1, c["load"])]) for c in cfgs}
-
-    def oh_of(c):
-        return oh[(c["num_azs"] > 1, c["load"])]
-
-    # bucket configs by padded flight size (next power of two): one compile
-    # per bucket, and the masked-member compute waste stays under 2x
-    buckets = bucket_by_pad(c["flight"] for c in cfgs)
-
-    rap = [None] * len(cfgs)
-    for f_pad, idxs in sorted(buckets.items()):
-        sub = [cfgs[i] for i in idxs]
-        a_pad = max(c["num_azs"] for c in sub)
-        res = _raptor_sweep_runner(
-            int(trials), f_pad, wl.num_tasks, a_pad, wl.dist,
-            wl.fail_prob)(
-                jax.random.PRNGKey(seed * 2 + 1),
-                jnp.array([c["flight"] for c in sub]),
-                jnp.array([c["num_azs"] for c in sub]),
-                jnp.array([c["rho"] for c in sub]),
-                wl.mean_ms, wl.offset_ms, wl.cv, wl.stage_overhead_ms, 0.5,
-                jnp.array([oh_of(c)[0] for c in sub]),
-                jnp.array([oh_of(c)[1] for c in sub]))
-        for j, i in enumerate(idxs):
-            rap[i] = (res[0][j], res[1][j], res[2][j])
-
-    stk = _stock_sweep_runner(
-        int(trials), wl.num_tasks, wl.dist, wl.fail_prob)(
-            jax.random.PRNGKey(seed * 2),
-            jnp.array([c["rho"] for c in cfgs]), wl.mean_ms, wl.offset_ms,
-            wl.cv, jnp.array([oh_of(c)[0] for c in cfgs]),
-            jnp.array([oh_of(c)[1] for c in cfgs]))
-
-    out = []
-    for i, c in enumerate(cfgs):
-        r = VectorResult(rap[i][0], rap[i][1], rap[i][2], True)
-        s = VectorResult(stk[0][i], stk[1][i], stk[2][i], False)
-        res = dict(c)
-        res["raptor"] = r.summary()
-        res["stock"] = s.summary()
-        res["mean_ratio"] = res["raptor"]["mean"] / res["stock"]["mean"]
-        out.append(res)
-    return out
+    from repro.sim.sweeps import open_loop_pair_plan
+    return open_loop_pair_plan(wl, configs, trials=trials,
+                               seed=seed).run(devices=devices)
 
 
 # --------------------------------------------------------------------------
@@ -460,9 +400,25 @@ class VectorResult:
         return float(forkjoin_fail_rate_batch(self.fail_draws))
 
     def summary(self) -> dict:
-        s = {k: (int(v) if k == "n" else float(v))
-             for k, v in summarize_batch(self.response_ms).items()}
+        """Delay summary conditioned on SUCCESS, failure accounting kept
+        alongside.
+
+        A failed job's "response" is its failure-*detection* time (every
+        member exhausted), not a delay a client would see — mixing those
+        into the percentiles biases the raptor summaries whenever
+        ``fail_prob > 0``.  ``n`` counts the successful jobs summarized;
+        ``n_failed`` and ``fail_rate`` carry the failure accounting.
+        """
+        ok = np.asarray(self.ok, dtype=bool)
+        resp = np.asarray(self.response_ms)[ok]
+        if resp.size:
+            s = {k: (int(v) if k == "n" else float(v))
+                 for k, v in summarize_batch(resp).items()}
+        else:
+            nan = float("nan")
+            s = dict(mean=nan, median=nan, p90=nan, p99=nan, scv=nan, n=0)
         s["fail_rate"] = self.fail_rate()
+        s["n_failed"] = int(ok.size - ok.sum())
         return s
 
 
@@ -515,10 +471,14 @@ class VectorFlightSim:
         return VectorResult(t, ok, fail, raptor)
 
     def run_pair(self, trials: int = 10_000) -> Dict[str, dict]:
-        """Stock + Raptor summaries and their mean ratio (Table-7 shape)."""
+        """Stock + Raptor summaries and their mean ratio (Table-7 shape).
+
+        The ratio divides the success-conditioned means (see
+        :meth:`VectorResult.summary`), so injected failures perturb
+        ``fail_rate``/``n_failed`` but never the delay comparison.
+        """
         stock = self.run(trials, raptor=False)
         rap = self.run(trials, raptor=True)
         out = {"stock": stock.summary(), "raptor": rap.summary()}
-        out["mean_ratio"] = float(
-            response_ratio_batch(rap.response_ms, stock.response_ms))
+        out["mean_ratio"] = out["raptor"]["mean"] / out["stock"]["mean"]
         return out

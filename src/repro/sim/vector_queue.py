@@ -50,9 +50,10 @@ Fidelity notes (vs the scalar oracle, tests/test_sim_queue.py):
   it lands within one poll of the same instant);
 * with ``fail_prob > 0`` *and* dependencies, a fully-deadlocked flight
   (every member parked on a task whose attempts all errored) terminates
-  with ``ok=False`` at its last event; the scalar sim leaves such jobs
-  unfinished and drops them.  The paper's DAG workloads inject no errors,
-  so the oracle comparison is unaffected.
+  with ``ok=False`` at its last event — the same convention the scalar
+  sim now follows (``FlightSim._check_deadlock``), so every admitted job
+  is accounted by BOTH engines and the scalar/vector agreement tests
+  compare like with like (tests/test_sim_queue.py's deadlock test).
 """
 from __future__ import annotations
 
@@ -548,30 +549,23 @@ def _stock_trial_fn(jobs: int, W: int, K: int, dep_t: tuple,
 
 @functools.lru_cache(maxsize=None)
 def _raptor_runner(jobs, W, A, F, K, seq_t, dep_t, dist, fail_prob,
-                   n_configs: int = 0, trace: bool = False):
-    """Jitted (trials,)-vmapped raptor runner; with ``n_configs`` > 0 a
-    second vmap over (rate, oh_mu, oh_sigma) turns it into a config sweep.
-    Cached so repeated ``run()`` calls reuse the compiled executable."""
+                   trace: bool = False):
+    """Jitted (trials,)-vmapped raptor runner, cached so repeated ``run()``
+    calls reuse the compiled executable.  Config sweeps no longer live
+    here: the device-sharded driver (:mod:`repro.sim.sweeps`) vmaps the
+    same per-trial body over the config axis and shards it over the mesh.
+    """
     trial = _raptor_trial_fn(jobs, W, A, F, K, seq_t, dep_t, dist,
                              fail_prob, trace)
-    fn = jax.vmap(trial, in_axes=(0,) + (None,) * 9)
-    if n_configs:
-        fn = jax.vmap(fn, in_axes=(None, 0, None, None, None, None, None,
-                                   None, 0, 0))
-    return jax.jit(fn)
+    return jax.jit(jax.vmap(trial, in_axes=(0,) + (None,) * 9))
 
 
 @functools.lru_cache(maxsize=None)
 def _stock_runner(jobs, W, K, dep_t, dist, fail_prob, passes,
-                  has_extras: bool = False, n_configs: int = 0,
-                  trace: bool = False):
+                  has_extras: bool = False, trace: bool = False):
     trial = _stock_trial_fn(jobs, W, K, dep_t, dist, fail_prob,
                             passes, has_extras, trace)
-    fn = jax.vmap(trial, in_axes=(0,) + (None,) * 9)
-    if n_configs:
-        fn = jax.vmap(fn, in_axes=(None, 0, None, None, None, None, None,
-                                   None, 0, 0))
-    return jax.jit(fn)
+    return jax.jit(jax.vmap(trial, in_axes=(0,) + (None,) * 9))
 
 
 # --------------------------------------------------------------------------
@@ -592,9 +586,20 @@ class QueueResult:
         return float(1.0 - jnp.mean(self.ok))
 
     def summary(self) -> dict:
-        s = {k: (int(v) if k == "n" else float(v))
-             for k, v in summarize_batch(self.response_ms.ravel()).items()}
+        """Delay summary conditioned on SUCCESS (a failed job's "response"
+        is its failure-detection time, not a client-visible delay), with
+        the failure accounting alongside: ``n`` counts the successful jobs
+        summarized, ``n_failed``/``fail_rate`` the rest."""
+        ok = np.asarray(self.ok, dtype=bool).ravel()
+        resp = np.asarray(self.response_ms).ravel()[ok]
+        if resp.size:
+            s = {k: (int(v) if k == "n" else float(v))
+                 for k, v in summarize_batch(resp).items()}
+        else:
+            nan = float("nan")
+            s = dict(mean=nan, median=nan, p90=nan, p99=nan, scv=nan, n=0)
         s["fail_rate"] = self.fail_rate()
+        s["n_failed"] = int(ok.size - ok.sum())
         return s
 
 
@@ -659,19 +664,19 @@ class QueueFlightSim:
                          else self._sdepth + 1 + int(stock_extra_passes))
 
     # -- compiled runners ------------------------------------------------
-    def _raptor_fn(self, jobs: int, n_configs: int = 0, trace: bool = False):
+    def _raptor_fn(self, jobs: int, trace: bool = False):
         return _raptor_runner(
             int(jobs), self.W, self.A, self.flight, len(self.wl.tasks),
             tuple(map(tuple, self._seq.tolist())),
             tuple(map(tuple, self._dep.tolist())),
-            self.wl.dist, self.wl.fail_prob, n_configs, trace)
+            self.wl.dist, self.wl.fail_prob, trace)
 
-    def _stock_fn(self, jobs: int, n_configs: int = 0, trace: bool = False):
+    def _stock_fn(self, jobs: int, trace: bool = False):
         return _stock_runner(
             int(jobs), self.W, len(self._smeans),
             tuple(map(tuple, self._sdep.tolist())),
             self.wl.dist, self.wl.fail_prob, self._spasses,
-            bool(self._sextras.any()), n_configs, trace)
+            bool(self._sextras.any()), trace)
 
     def _raptor_args(self):
         wl = self.wl
@@ -738,58 +743,37 @@ class QueueFlightSim:
 
 
 # --------------------------------------------------------------------------
-# batched config sweeps: vmap over (arrival rate, rho, overhead regime)
+# batched config sweeps: thin plans over the device-sharded driver
 # --------------------------------------------------------------------------
-
-def _pair_sweep(sims, jobs: int, trials: int):
-    """Run stock+raptor for a list of same-deployment sims in ONE
-    compilation per mode: arrival rate and the Table-6 overhead lognormal
-    are traced, so the config axis is just a ``vmap`` — adding a point
-    costs milliseconds, not a recompile."""
-    s0 = sims[0]
-    rates = jnp.array([s.rate_hz for s in sims])
-    mus = jnp.array([s.oh_mu for s in sims])
-    sigmas = jnp.array([s.oh_sigma for s in sims])
-
-    r_fn = s0._raptor_fn(jobs, n_configs=len(sims))
-    (_, _, means, offset, cv, stage_oh, slat, _, _) = s0._raptor_args()
-    r_resp, r_ok = r_fn(s0._keys(trials, True), rates, s0.rho, means,
-                        offset, cv, stage_oh, slat, mus, sigmas)
-
-    s_fn = s0._stock_fn(jobs, n_configs=len(sims))
-    (_, _, smeans, sextras, soffset, scv, sstage, _, _) = s0._stock_args()
-    s_resp, s_ok = s_fn(s0._keys(trials, False), rates, s0.rho, smeans,
-                        sextras, soffset, scv, sstage, mus, sigmas)
-
-    out = []
-    for i in range(len(sims)):
-        rap = QueueResult(r_resp[i], r_ok[i], True)
-        stock = QueueResult(s_resp[i], s_ok[i], False)
-        res = {"stock": stock.summary(), "raptor": rap.summary()}
-        res["mean_ratio"] = res["raptor"]["mean"] / res["stock"]["mean"]
-        out.append(res)
-    return out
-
+# Arrival rate and the Table-6 overhead lognormal are traced, so the config
+# axis is pure batching; repro.sim.sweeps vmaps it and shards it over the
+# device mesh (bit-identical to the single-device run) — adding a point
+# costs milliseconds, not a recompile, and a multi-device host runs the
+# grid near-linearly faster (BENCH_sim.json sweep_sharded).
 
 def load_sweep(wl: QueueWorkload, *, num_workers: int = 15, num_azs: int = 3,
                loads=("low", "medium", "high"), rho: float = 0.95,
                jobs: int = 1024, trials: int = 16,
-               seed: int = 0) -> Dict[str, dict]:
+               seed: int = 0, devices=None) -> Dict[str, dict]:
     """All Table-6 load points of one deployment, one compile per mode."""
+    from repro.sim.sweeps import queue_pair_plan
     sims = [QueueFlightSim(wl, num_workers=num_workers, num_azs=num_azs,
                            load=load, rho=rho, seed=seed) for load in loads]
-    return dict(zip(loads, _pair_sweep(sims, jobs, trials)))
+    return dict(zip(loads,
+                    queue_pair_plan(sims, jobs, trials).run(devices=devices)))
 
 
 def rate_sweep(wl: QueueWorkload, rates_hz, *, loads=None,
                num_workers: int = 15, num_azs: int = 3, rho: float = 0.95,
-               jobs: int = 1024, trials: int = 16, seed: int = 0):
+               jobs: int = 1024, trials: int = 16, seed: int = 0,
+               devices=None):
     """Arbitrary arrival-rate grid (continuous load axis) on one
     deployment; ``loads`` optionally names the Table-6 overhead regime per
     point (defaults to "medium").  Returns one pair dict per rate."""
+    from repro.sim.sweeps import queue_pair_plan
     loads = list(loads) if loads is not None else ["medium"] * len(rates_hz)
     sims = [QueueFlightSim(wl, num_workers=num_workers, num_azs=num_azs,
                            load=load, rho=rho, arrival_rate_hz=float(r),
                            seed=seed)
             for r, load in zip(rates_hz, loads)]
-    return _pair_sweep(sims, jobs, trials)
+    return queue_pair_plan(sims, jobs, trials).run(devices=devices)

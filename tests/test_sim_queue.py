@@ -200,6 +200,51 @@ def test_saturated_regime_growth_rates_agree():
         f"scalar backlog slope {scal_slope:.4f} vs vector {vec_slope:.4f}")
 
 
+def test_deadlocked_dag_flights_terminate_and_agree():
+    """fail_prob > 0 on a staged DAG: the scalar sim used to poll a dead
+    dependency forever (the event queue never drained, so the censored
+    jobs could not even be observed); both engines must now terminate
+    deadlocked flights with ok=False at their last event and account
+    every admitted job — the shared convention the agreement tests
+    depend on."""
+    import dataclasses
+    wl = wordcount_workload()
+    wl.fail_prob = 0.35
+    sim = FlightSim(Cluster(seed=3, **HA), wl, raptor=True,
+                    arrival_rate_hz=rate_for(wl, HA, "low"),
+                    duration_s=900.0, load="low", seed=3)
+    jobs = sim.run()
+    assert jobs and all(j.t_done >= 0 for j in jobs), "censored jobs"
+    scal_fail = float(np.mean([not j.ok for j in jobs]))
+    assert 0.2 < scal_fail < 0.9          # the regime actually deadlocks
+    qwl = dataclasses.replace(wordcount_queue(), fail_prob=0.35)
+    vec = QueueFlightSim(qwl, load="low", seed=0, **HA)
+    r = vec.run(1024, 8, raptor=True)
+    assert np.isfinite(np.asarray(r.response_ms)).all()
+    assert r.fail_rate() == pytest.approx(scal_fail, abs=0.04)
+
+
+def test_scalar_honors_small_stream_latency():
+    """The old dependency wait polled at max(slat, 0.1)ms, quantizing
+    sub-0.1ms stream latencies away from the vector scan's exact
+    broadcast+slat wake (and busy-polling meanwhile).  Waits are now
+    event-driven: a tiny slat runs fine and the engines agree."""
+    slat = 0.02
+    wl = wordcount_workload()
+    sim = FlightSim(Cluster(seed=7, **HA), wl, raptor=True,
+                    arrival_rate_hz=rate_for(wl, HA, "low"),
+                    duration_s=1800.0, load="low",
+                    stream_latency_ms=slat, seed=7)
+    jobs = sim.run()
+    scal_mean = float(np.mean([j.response for j in jobs]))
+    vec = QueueFlightSim(wordcount_queue(), load="low", seed=0,
+                         stream_latency_ms=slat, **HA)
+    vs = vec.run(JOBS, TRIALS, raptor=True).summary()
+    assert vs["mean"] == pytest.approx(scal_mean, rel=0.08), (
+        f"slat={slat}: scalar {scal_mean:.0f}ms vs vector "
+        f"{vs['mean']:.0f}ms")
+
+
 def test_load_sweep_matches_single_runs():
     """The config-vmapped sweep must reproduce per-config runs exactly
     (same keys, same draws — the vmap is pure batching)."""

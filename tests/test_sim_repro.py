@@ -72,6 +72,22 @@ def test_scalar_engine_drivers_still_work():
     assert 0.8 < out7["thumbnail"]["mean_ratio"] < 1.05
 
 
+def test_run_pair_reports_failures_separately():
+    """Scalar driver accounting: delay summaries are success-conditioned
+    and the failed jobs are reported via n_failed, not silently mixed in
+    (with fail_prob > 0 a raptor 'response' of a failed job is the
+    failure-detection time, not a delay)."""
+    from repro.sim.experiments import HA, run_pair
+    from repro.sim.workloads import reliability_workload
+    res = run_pair(lambda: reliability_workload(2, 0.3), HA, load="low",
+                   duration_s=300.0, seed=0)
+    for side in ("stock", "raptor"):
+        s = res[side]
+        assert s["n_failed"] > 0
+        assert s["fail_rate"] == pytest.approx(
+            s["n_failed"] / (s["n"] + s["n_failed"]))
+
+
 def test_fig8_reliability():
     out = fig8_reliability(n_jobs_s=400.0)
     for key, row in out.items():

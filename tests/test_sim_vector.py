@@ -231,6 +231,25 @@ def test_sweep_pairs_padding_is_neutral():
                                                  abs=0.02)
 
 
+def test_summaries_condition_on_success():
+    """fail_prob > 0: failed jobs' failure-*detection* times must not leak
+    into the delay summaries (they used to drag the raptor mean/tails);
+    they are accounted in fail_rate / n_failed instead."""
+    sim = VectorFlightSim(reliability_vector(2, 0.3), num_azs=3, flight=2,
+                          load="low", seed=0)
+    res = sim.run(20_000, raptor=True)
+    s = res.summary()
+    resp = np.array(res.response_ms)
+    ok = np.array(res.ok, dtype=bool)
+    assert s["n"] == int(ok.sum())
+    assert s["n_failed"] == int((~ok).sum()) and s["n_failed"] > 1000
+    assert s["n"] + s["n_failed"] == resp.size
+    assert s["mean"] == pytest.approx(float(resp[ok].mean()), rel=1e-5)
+    # the bias this fix removes: failure-detection times ARE different
+    # from success delays, so the unconditioned mean was wrong
+    assert float(resp.mean()) != pytest.approx(s["mean"], rel=0.02)
+
+
 def test_summarize_batch_matches_host():
     rng = np.random.default_rng(0)
     x = rng.exponential(100.0, size=5000)

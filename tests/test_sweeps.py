@@ -1,0 +1,163 @@
+"""Device-sharded sweep driver (sim/sweeps.py).
+
+Three properties keep the multi-controller sweep path honest:
+
+* **sharding is pure batching** — the same plan over 1/2/8 forced host
+  devices must produce bit-identical summaries.  The device count is a
+  process-level XLA flag, so the check runs in a subprocess that forces
+  ``--xla_force_host_platform_device_count=8`` and compares the sharded
+  runs against the single-device one (JSON-exact, i.e. float-bit-exact);
+* **bucketing never drops grid points** — every plan partitions its config
+  grid per output tag (``SweepPlan.validate``), checked here over random
+  grids (hypothesis tier + seeded fallback, same shared helper);
+* **thin ports stay equivalent** — sweep_pairs/rate_sweep through the
+  driver match the per-config engines (covered by the existing agreement
+  tests in test_sim_vector.py/test_sim_queue.py, which now run through
+  the plan path by construction).
+
+Seed convention: explicit integer seeds everywhere, as in every sim test
+module — reruns are bit-reproducible.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+jax = pytest.importorskip("jax")
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+except ModuleNotFoundError:  # bare env: hypothesis tier skips, grid runs
+    from _hypothesis_compat import hypothesis, st
+
+from repro.sim.sweeps import SweepPlan, open_loop_pair_plan  # noqa: E402
+from repro.sim.vector import exponential_vector, pow2_pad  # noqa: E402
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ------------------------------------------------------------------
+# sharded == single-device, bit for bit (subprocess: device count is a
+# process-level XLA flag)
+# ------------------------------------------------------------------
+
+EQUIV_SCRIPT = r"""
+import json, os, sys
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=8")
+import jax
+assert jax.device_count() == 8, jax.devices()
+from repro.sim.vector import exponential_vector, sweep_pairs
+from repro.sim.vector_queue import keygen_queue, rate_sweep
+
+# sweep_scale's grid shape in miniature: an AZ axis at fixed flight plus a
+# flight axis (two pow2 buckets), so padding, bucketing, and the stock
+# single-bucket path all cross the shard boundary
+grid = ([dict(flight=4, num_azs=a) for a in (1, 2, 3)]
+        + [dict(flight=f, num_azs=8) for f in (2, 4)])
+wl = exponential_vector(2, 1000.0)
+open_runs = {d: sweep_pairs(wl, grid, trials=1000, seed=0, devices=d)
+             for d in (1, 2, 8)}
+rates = [1.0, 2.0, 3.0, 4.0]
+queue_runs = {d: rate_sweep(keygen_queue(), rates, jobs=64, trials=4,
+                            seed=0, devices=d)
+              for d in (1, 2, 8)}
+for d in (2, 8):
+    assert json.dumps(open_runs[d], sort_keys=True) == \
+        json.dumps(open_runs[1], sort_keys=True), f"open-loop d={d}"
+    assert json.dumps(queue_runs[d], sort_keys=True) == \
+        json.dumps(queue_runs[1], sort_keys=True), f"closed-loop d={d}"
+print("EQUIV-OK")
+"""
+
+
+def test_sharded_runs_bit_identical_across_device_counts():
+    """The acceptance check: the same seeds through 1, 2, and 8 forced
+    host devices must produce identical summaries — the shard axis is
+    pure batching, never a statistical knob."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(REPO, "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    r = subprocess.run([sys.executable, "-c", EQUIV_SCRIPT], cwd=REPO,
+                       capture_output=True, text=True, timeout=1200,
+                       env=env)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "EQUIV-OK" in r.stdout
+
+
+# ------------------------------------------------------------------
+# bucketing partitions the grid (shared helper for both tiers)
+# ------------------------------------------------------------------
+
+def assert_plan_covers_grid(flights, azs):
+    configs = [dict(flight=f, num_azs=a) for f, a in zip(flights, azs)]
+    plan = open_loop_pair_plan(exponential_vector(2, 1000.0), configs,
+                               trials=16, seed=0)
+    for tag in ("raptor", "stock"):
+        idxs = sorted(i for t in plan.tasks if t.tag == tag
+                      for i in t.idxs)
+        assert idxs == list(range(len(configs))), (
+            f"{tag} buckets cover {idxs} of {len(configs)} grid points")
+    # and every raptor bucket is shaped by its members' pow2 pad
+    for t in plan.tasks:
+        if t.tag == "raptor":
+            pads = {pow2_pad(configs[i]["flight"]) for i in t.idxs}
+            assert len(pads) == 1, f"mixed pads {pads} in one bucket"
+
+
+GRIDS = [
+    ([2], [3]),
+    ([2, 3, 4, 5, 8, 16], [1, 2, 3, 4, 6, 8]),
+    ([7, 7, 7], [1, 1, 8]),
+    ([16, 2, 9, 2, 16], [8, 1, 3, 1, 8]),
+]
+
+
+@pytest.mark.parametrize("flights,azs", GRIDS)
+def test_plan_bucketing_covers_grid(flights, azs):
+    assert_plan_covers_grid(flights, azs)
+
+
+@hypothesis.given(
+    flights=st.lists(st.integers(min_value=1, max_value=32), min_size=1,
+                     max_size=24),
+    az_seed=st.integers(min_value=0, max_value=2**16),
+)
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_plan_bucketing_covers_grid_property(flights, az_seed):
+    import numpy as np
+    azs = (np.random.default_rng(az_seed)
+           .integers(1, 9, size=len(flights)).tolist())
+    assert_plan_covers_grid(flights, azs)
+
+
+def test_plan_rejects_dropped_grid_points():
+    """A hand-corrupted plan (bucket idxs missing a config) must be
+    refused at construction, not silently produce short output."""
+    plan = open_loop_pair_plan(exponential_vector(2, 1000.0),
+                               [dict(flight=2, num_azs=3),
+                                dict(flight=4, num_azs=3)],
+                               trials=16, seed=0)
+    broken = [t if t.tag != "stock"
+              else type(t)(t.tag, t.idxs[:-1], t.core, t.key,
+                           tuple(a[:-1] for a in t.cfg), t.shared)
+              for t in plan.tasks]
+    with pytest.raises(ValueError, match="buckets cover"):
+        SweepPlan(plan.name, plan.configs, broken, plan.finalize)
+
+
+def test_plan_run_single_device_matches_per_config_engine():
+    """In-process (1 visible device) sanity: the plan path reproduces the
+    per-config VectorFlightSim numbers, same as the pre-driver sweep."""
+    from repro.sim.vector import VectorFlightSim, sweep_pairs
+    wl = exponential_vector(2, 1000.0)
+    sweep = sweep_pairs(wl, [dict(flight=2, num_azs=3)], trials=4000,
+                        seed=0, devices=1)[0]
+    solo = VectorFlightSim(wl, num_azs=3, flight=2, seed=0).run_pair(4000)
+    assert sweep["raptor"]["mean"] == pytest.approx(
+        solo["raptor"]["mean"], rel=1e-4)
+    assert sweep["mean_ratio"] == pytest.approx(solo["mean_ratio"],
+                                                abs=1e-3)
