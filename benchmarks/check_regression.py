@@ -20,7 +20,8 @@ import sys
 # (path into the record, human label)
 TRACKED = [
     (("vector", "trials_per_s"), "open-loop vector trials/s"),
-    (("queue", "jobs_per_s"), "closed-loop queue jobs/s"),
+    (("queue", "jobs_per_s"), "closed-loop queue (oracle) jobs/s"),
+    (("queue_blocked", "jobs_per_s"), "blocked event-replay queue jobs/s"),
     (("dag_wordcount", "jobs_per_s"), "wordcount DAG jobs/s"),
     (("queue_stock_taskfcfs", "jobs_per_s"), "task-FCFS stock jobs/s"),
     (("fig6_sweep", "vector_jobs_per_s"), "fig6 load-sweep jobs/s"),

@@ -120,13 +120,19 @@ def _scalar_jobs_per_s(wl_fn, deployment, load, n_jobs, *, raptor=True,
 
 
 def bench_sim_vector(trials: int = 10000):
-    """Vectorized MC sim vs the scalar event-driven FlightSim, three tiers:
+    """Vectorized MC sim vs the scalar event-driven FlightSim, per tier:
 
     * open_loop — the PR-1 zero-queueing batch (Table-7 keygen config);
-    * queue     — the closed-loop M/G/c engine (fig6 keygen, medium load),
-                  cold vs warm compile recorded (persistent cache);
+    * queue     — the closed-loop M/G/c engine on the SEQUENTIAL ORACLE
+                  path (block=1: plain event scan, conservative race
+                  budget — bit-for-bit the pre-blocking engine), cold vs
+                  warm compile recorded (persistent cache);
+    * queue_blocked — the same workload/jobs/trials on the blocked
+                  event-replay core (sim/scan_core.py) at its auto
+                  config: chunked replay + tight K-completion races,
+                  results bitwise equal to the oracle (checked in-bench);
     * dag       — the wordcount DAG manifest through the dependency-masked
-                  flight scan, closed loop at medium load;
+                  flight scan, closed loop at medium load (blocked core);
     * queue-stock-taskfcfs — the task-granular stock replay (wordcount
                   STOCK at util 0.75), ≥20x the scalar oracle;
     * sweep-sharded — the closed-loop utilisation grid through the
@@ -134,11 +140,13 @@ def bench_sim_vector(trials: int = 10000):
                   (forced-host) devices vs one: ≥2x grid throughput on a
                   4-device host, summaries bit-identical.
 
-    The metric is jobs/sec at matched job counts; results land in
+    Every closed-loop tier records compile_cold_s/compile_warm_s.  The
+    metric is jobs/sec at matched job counts; results land in
     BENCH_sim.json so CI can gate on regressions (benchmarks/
     check_regression.py).
     """
     import jax
+    import numpy as np
     from repro.sim.experiments import HA
     from repro.sim.vector import VectorFlightSim, keygen_vector
     from repro.sim.vector_queue import (QueueFlightSim, keygen_queue,
@@ -146,6 +154,11 @@ def bench_sim_vector(trials: int = 10000):
     from repro.sim.workloads import keygen_workload, wordcount_workload
 
     record = {"trials": trials}
+    # the PR-4 recording's queue tier (the engine the blocked core
+    # replaced), pinned as a constant so the provenance anchor cannot
+    # drift when this run overwrites BENCH_sim.json: every regeneration
+    # reports the blocked core's speedup against the same seed number
+    prior_queue_tps = 378886.96846149676
 
     # ---- open loop (legacy layout: top-level scalar/vector/speedup) ----
     n_jobs, scalar_s = _scalar_jobs_per_s(keygen_workload, HA, "medium",
@@ -181,18 +194,28 @@ def bench_sim_vector(trials: int = 10000):
          f"scalar={scalar_tps:.0f}t/s_vector={vector_tps:.0f}t/s"
          f"_speedup={record['speedup']:.0f}x_target>=50x")
 
-    # ---- closed-loop queue (fig6 keygen, medium) -----------------------
+    def cold_warm(run):
+        """Cold compile, then warm (in-memory exes dropped, persistent
+        disk cache hot) — recorded for every closed-loop tier."""
+        t0 = time.time()
+        out = run()
+        out.response_ms.block_until_ready()
+        cold = time.time() - t0
+        jax.clear_caches()        # drop in-memory exe; reload from disk
+        t0 = time.time()
+        run().response_ms.block_until_ready()
+        return out, cold, time.time() - t0
+
+    # ---- closed-loop queue: the sequential ORACLE path (block=1) -------
+    # block=1 pins the plain event scan with the conservative full race
+    # budget — bit-for-bit the pre-blocking engine, the configuration the
+    # blocked core is verified against (tests/test_queue_properties.py)
     q_jobs = max(trials // 8, 256)
     q_trials = 48
-    qsim = QueueFlightSim(keygen_queue(), load="medium", seed=0, **HA)
-    t0 = time.time()
-    r = qsim.run(q_jobs, q_trials, raptor=True)
-    r.response_ms.block_until_ready()
-    cold_s = time.time() - t0
-    jax.clear_caches()            # drop in-memory exe; reload from disk
-    t0 = time.time()
-    qsim.run(q_jobs, q_trials, raptor=True).response_ms.block_until_ready()
-    warm_s = time.time() - t0
+    qsim = QueueFlightSim(keygen_queue(), load="medium", seed=0, block=1,
+                          **HA)
+    r, cold_s, warm_s = cold_warm(
+        lambda: qsim.run(q_jobs, q_trials, raptor=True))
     q_wall = best_of(
         lambda: qsim.run(q_jobs, q_trials,
                          raptor=True).response_ms.block_until_ready())
@@ -211,10 +234,45 @@ def bench_sim_vector(trials: int = 10000):
          f"_speedup={q_tps/(sn/ss):.0f}x_cold={cold_s:.1f}s"
          f"_warm={warm_s:.2f}s_target>=50x")
 
+    # ---- queue_blocked: the blocked event-replay core, same shape ------
+    # same workload at EQUAL jobs/trials on the blocked substrate's auto
+    # config (chunked replay + tight K-completion race budget); responses
+    # must be bitwise the oracle's, and the acceptance anchor is the
+    # speedup over the seed recording's queue tier (>= 2x)
+    bsim = QueueFlightSim(keygen_queue(), load="medium", seed=0, **HA)
+    rb, b_cold, b_warm = cold_warm(
+        lambda: bsim.run(q_jobs, q_trials, raptor=True))
+    b_wall = best_of(
+        lambda: bsim.run(q_jobs, q_trials,
+                         raptor=True).response_ms.block_until_ready())
+    b_tps = q_jobs * q_trials / b_wall
+    blk, res_mode = bsim.engine_config("raptor")
+    exact = bool(np.array_equal(np.asarray(rb.response_ms),
+                                np.asarray(r.response_ms)))
+    record["queue_blocked"] = {
+        "vector_jobs": q_jobs * q_trials, "wall_s": b_wall,
+        "jobs_per_s": b_tps, "compile_cold_s": b_cold,
+        "compile_warm_s": b_warm, "block": blk, "resolver": res_mode,
+        "bitwise_equals_oracle": exact,
+        "vs_queue_oracle": b_tps / q_tps,
+        "baseline_queue_jobs_per_s": prior_queue_tps,
+        "speedup_vs_baseline_queue": (
+            b_tps / prior_queue_tps if prior_queue_tps else None),
+        "mean_ms": rb.summary()["mean"],
+    }
+    base_txt = (f"_vs_seed={b_tps / prior_queue_tps:.2f}x"
+                if prior_queue_tps else "")
+    _row("sim_queue_blocked", b_wall * 1e6 / (q_jobs * q_trials),
+         f"oracle={q_tps:.0f}j/s_blocked={b_tps:.0f}j/s"
+         f"_x{b_tps/q_tps:.2f}{base_txt}_block={blk}/{res_mode}"
+         f"_bitwise={exact}_cold={b_cold:.1f}s_warm={b_warm:.2f}s"
+         f"_target>=2x_vs_seed")
+
     # ---- DAG workload (wordcount) through the dep-masked scan ----------
     d_jobs, d_trials = max(trials // 16, 128), 16
     dsim = QueueFlightSim(wordcount_queue(), load="medium", seed=0, **HA)
-    r = dsim.run(d_jobs, d_trials, raptor=True)
+    r, d_cold, d_warm = cold_warm(
+        lambda: dsim.run(d_jobs, d_trials, raptor=True))
     d_wall = best_of(
         lambda: dsim.run(d_jobs, d_trials,
                          raptor=True).response_ms.block_until_ready())
@@ -223,12 +281,14 @@ def bench_sim_vector(trials: int = 10000):
                                 min(d_jobs * d_trials, 4096))
     record["dag_wordcount"] = {
         "vector_jobs": d_jobs * d_trials, "jobs_per_s": d_tps,
+        "compile_cold_s": d_cold, "compile_warm_s": d_warm,
         "scalar_jobs_per_s": sn / ss, "speedup": d_tps / (sn / ss),
         "mean_ms": r.summary()["mean"],
     }
     _row("sim_dag", d_wall * 1e6 / (d_jobs * d_trials),
          f"scalar={sn/ss:.0f}j/s_vector={d_tps:.0f}j/s"
-         f"_speedup={d_tps/(sn/ss):.0f}x")
+         f"_speedup={d_tps/(sn/ss):.0f}x_cold={d_cold:.1f}s"
+         f"_warm={d_warm:.2f}s")
 
     # ---- queue-stock-taskfcfs: the task-granular stock engine ----------
     # wordcount STOCK at util 0.75 (load="high") — the regime the
@@ -241,7 +301,8 @@ def bench_sim_vector(trials: int = 10000):
     tf_jobs, tf_trials = 256, max(trials // 80, 24)
     tfsim = QueueFlightSim(wordcount_queue(), load="high", seed=0,
                            stock_extra_passes=0, **HA)
-    r = tfsim.run(tf_jobs, tf_trials, raptor=False)
+    r, tf_cold, tf_warm = cold_warm(
+        lambda: tfsim.run(tf_jobs, tf_trials, raptor=False))
     tf_wall = best_of(
         lambda: tfsim.run(tf_jobs, tf_trials,
                           raptor=False).response_ms.block_until_ready())
@@ -251,12 +312,14 @@ def bench_sim_vector(trials: int = 10000):
                                 raptor=False)
     record["queue_stock_taskfcfs"] = {
         "vector_jobs": tf_jobs * tf_trials, "jobs_per_s": tf_tps,
+        "compile_cold_s": tf_cold, "compile_warm_s": tf_warm,
         "scalar_jobs_per_s": sn / ss, "speedup": tf_tps / (sn / ss),
         "mean_ms": r.summary()["mean"],
     }
     _row("sim_stock_taskfcfs", tf_wall * 1e6 / (tf_jobs * tf_trials),
          f"scalar={sn/ss:.0f}j/s_vector={tf_tps:.0f}j/s"
-         f"_speedup={tf_tps/(sn/ss):.0f}x_target>=20x")
+         f"_speedup={tf_tps/(sn/ss):.0f}x_cold={tf_cold:.1f}s"
+         f"_warm={tf_warm:.2f}s_target>=20x")
 
     # ---- sweep-sharded: the config grid over the device mesh -----------
     # The closed-loop utilisation grid through the SweepPlan driver

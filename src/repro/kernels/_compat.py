@@ -11,3 +11,15 @@ from jax.experimental.pallas import tpu as pltpu
 
 CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
     pltpu, "TPUCompilerParams")
+
+
+def interpret_default() -> bool:
+    """Whether Pallas calls should default to interpret mode here.
+
+    Compiled Pallas targets the TPU backend; everywhere else (CPU CI
+    runners, forced-host device meshes, local dev boxes) the same kernels
+    run through the Pallas interpreter so the code path stays exercised.
+    Ops with an ``interpret=None`` knob resolve it through this one gate.
+    """
+    import jax
+    return jax.default_backend() != "tpu"

@@ -1,0 +1,30 @@
+"""Oracle for the queue-booking kernel: the sequential best-fit scan.
+
+Delegates to the (separately property-tested) booking step in
+:mod:`repro.sim.scan_core` — the exact discipline the closed-loop stock
+engine replays (best-fit among free workers, earliest-free fallback,
+``ready = inf`` events book nothing) — run one event at a time with the
+free-at vector carried through a plain ``lax.scan``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sim.scan_core import blocked_bestfit_booking
+
+
+def book_stream_ref(ready, service, wf0):
+    """ready/service: (T, N) ready-sorted streams; wf0: (T, W).
+
+    Returns (fin (T, N), start (T, N), worker (T, N) int32, wf (T, W)).
+    """
+    def one(r, s, w0):
+        fin, st, wk = blocked_bestfit_booking(w0, r, s, block=1, full=True)
+        live = wk >= 0
+        wf = jnp.max(jnp.where((wk[:, None] == jnp.arange(w0.shape[0]))
+                               & live[:, None], fin[:, None], w0[None, :]),
+                     axis=0)
+        return fin, st, wk, wf
+
+    return jax.vmap(one)(ready, service, wf0)

@@ -1,0 +1,318 @@
+"""Blocked event-replay substrate: chunked max-plus scans over a worker pool.
+
+Every closed-loop engine in :mod:`repro.sim.vector_queue` replays one
+sorted event stream per trial against a pool of ``W`` workers, carrying the
+per-worker free-at-time vector through a ``lax.scan`` — O(events) of
+*sequential* depth that no amount of trial-vmapping or device sharding
+(PR 4) can hide, because every step is a tiny dispatch-bound op.  This
+module cuts that depth by the block size: the stream is chunked into blocks
+of ``B`` events, all bookings inside a block are resolved by a bounded
+parallel fixed point, and only the W-vector crosses block boundaries.
+
+Why a fixed point suffices (the blocked max-plus recurrence, derived in
+EXPERIMENTS.md):
+
+* an event's booking depends on earlier events ONLY through the worker
+  free-at vector ``wf`` it observes, and every booking enters ``wf`` as a
+  per-worker **max** (release times on one worker are non-decreasing in
+  booking order, so max == overwrite) — a max-plus update;
+* therefore the vector event ``i`` observes is reconstructible from the
+  block-entry vector plus the bookings of events ``j < i`` alone:
+  ``wf_i = max(wf_in, max_{j<i} contrib_j)`` — an *exclusive running max*
+  over the block, computable for every event at once (``lax.cummax``);
+* that dependency is strictly lower-triangular in the event order, so the
+  Jacobi iteration "re-book every event against the vectors reconstructed
+  from the previous pass" has a UNIQUE fixed point — the sequential
+  schedule itself — and after pass ``p`` the first ``p`` events are exact.
+  ``B`` passes are thus always enough (the bound), and the loop exits as
+  soon as one pass changes nothing (typically ~(block bookings)/W + 1
+  passes: the longest same-worker chain inside the block).
+
+The intra-block work is (B x W) dense arithmetic vectorized across the
+(trials x B) plane; sequential depth drops from O(events) to
+O(events/B * passes).  ``block=1`` degenerates to the plain event scan
+(bit-for-bit the pre-blocking engines) and is kept as the oracle path.
+
+The fused best-fit/earliest-free booking step additionally ships as a
+Pallas kernel (:mod:`repro.kernels.queue_booking`) so accelerator runs
+resolve whole blocks in VMEM instead of round-tripping HBM per event;
+:func:`blocked_bestfit_booking` routes between the two backends.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def booking_contrib(num_workers: int, widx, rel):
+    """Dense (..., W) max-map of one event's bookings.
+
+    ``widx``/``rel`` are the event's booked worker indices and release
+    times, shape (..., M); a negative index (dead/padded booking) matches
+    no worker and contributes ``-inf`` everywhere.  One-hot arithmetic
+    only — per-trial dynamic scatters cripple the vmapped replay on CPU.
+    """
+    oh = widx[..., None] == jnp.arange(num_workers)
+    return jnp.max(jnp.where(oh, rel[..., None], -jnp.inf), axis=-2)
+
+
+def apply_bookings(wf, widx, rel):
+    """Fold one event's bookings into the free-at vector (max-plus)."""
+    return jnp.maximum(wf, booking_contrib(wf.shape[-1], widx, rel))
+
+
+def exclusive_running_max(contrib, wf_in):
+    """Per-event observed W-vectors: row ``i`` is ``max(wf_in,
+    max_{j<i} contrib[j])`` — the worker vector event ``i`` would see had
+    events ``0..i-1`` booked exactly ``contrib[0..i-1]``."""
+    run = lax.cummax(contrib, axis=0)
+    prev = jnp.concatenate(
+        [jnp.full((1,) + run.shape[1:], -jnp.inf, run.dtype), run[:-1]],
+        axis=0)
+    return jnp.maximum(wf_in[None, :], prev)
+
+
+def blocked_event_replay(body, wf0, events, *, block: int,
+                         resolver: str = "fixpoint", unroll: int = 1):
+    """Replay a sorted event stream in blocks, carrying only the W-vector.
+
+    ``body(wf, event) -> ((widx, rel), out)`` books one event against the
+    worker free-at vector ``wf`` it observes: ``widx`` (M,) int are the
+    booked workers (< 0 books nothing — the dead/padded convention),
+    ``rel`` (M,) their release times (must be ``-inf`` wherever the event
+    must not touch the pool), ``out`` an arbitrary output pytree.  Events
+    is a pytree with leading axis N (the per-trial stream, already sorted
+    and — for the fixpoint resolver — padded to a multiple of ``block``).
+
+    ``block <= 1`` runs the plain sequential scan (bit-identical to the
+    pre-blocking engines; ``unroll`` trims its per-step dispatch cost) —
+    the oracle path.  For ``block > 1`` the intra-block resolver is:
+
+    * ``"fixpoint"`` — the bounded parallel Jacobi described in the
+      module docstring: exact in at most ``block`` passes, early-exit on
+      convergence, all comparisons bitwise so the fixed point IS the
+      sequential schedule.  Pass count tracks the longest intra-block
+      dependency chain, so this is the depth-reduction mode: O(N/B·p)
+      runtime steps, each (trials x B)-wide.  When bookings are
+      placement-coupled (the raptor HA discipline: which worker is free
+      decides the AZ-shared draws) chains approach the block length and
+      the mode loses its edge — measured in EXPERIMENTS.md.
+    * ``"unrolled"`` — resolve the block as one fused straight-line
+      region (scan unrolling): the runtime loop still has depth N/B with
+      only the W-vector carried between iterations, but events inside a
+      block resolve sequentially in-register instead of iteratively in
+      parallel.  The throughput mode for placement-coupled streams.
+
+    Both resolvers are bitwise-identical to the ``block=1`` oracle scan
+    (tests/test_queue_properties.py).  Returns ``(wf_final, outs)`` with
+    each out leaf stacked along the (padded) event axis.
+    """
+    W = int(wf0.shape[-1])
+    n = int(jax.tree_util.tree_leaves(events)[0].shape[0])
+    block = int(block)
+
+    if block <= 1 or resolver == "unrolled":
+        def step(wf, ev):
+            (widx, rel), out = body(wf, ev)
+            return apply_bookings(wf, widx, rel), out
+        return lax.scan(step, wf0, events,
+                        unroll=unroll if block <= 1 else block)
+
+    if resolver != "fixpoint":
+        raise ValueError(f"unknown block resolver {resolver!r}")
+    if n % block:
+        raise ValueError(
+            f"event stream length {n} is not a multiple of block={block}; "
+            f"pad the stream (dead events: ready=inf / widx=-1)")
+    nb = n // block
+    ev_blocks = jax.tree_util.tree_map(
+        lambda a: a.reshape((nb, block) + a.shape[1:]), events)
+    vbody = jax.vmap(body)
+
+    def resolve_block(wf, ev):
+        def one_pass(est):
+            rows = exclusive_running_max(booking_contrib(W, *est), wf)
+            return vbody(rows, ev)
+
+        # pass 1 observes the carried vector alone (an empty-prefix
+        # estimate), which doubles as the shape probe for the estimates
+        est1, out1 = vbody(jnp.broadcast_to(wf, (block, W)), ev)
+        est0 = (jnp.full_like(est1[0], -1),
+                jnp.full_like(est1[1], -jnp.inf))
+
+        def cond(c):
+            p, est, prev, _ = c
+            changed = (jnp.any(est[0] != prev[0])
+                       | jnp.any(est[1] != prev[1]))
+            return changed & (p < block)
+
+        def again(c):
+            p, est, _, _ = c
+            est2, out2 = one_pass(est)
+            return p + 1, est2, est, out2
+
+        _, est, _, out = lax.while_loop(
+            cond, again, (jnp.asarray(1), est1, est0, out1))
+        wf2 = jnp.maximum(wf, jnp.max(booking_contrib(W, *est), axis=0))
+        return wf2, out
+
+    wf_final, outs = lax.scan(resolve_block, wf0, ev_blocks)
+    outs = jax.tree_util.tree_map(
+        lambda a: a.reshape((n,) + a.shape[2:]), outs)
+    return wf_final, outs
+
+
+# --------------------------------------------------------------------------
+# the shared booking step (task-FCFS stock discipline) + its blocked driver
+# --------------------------------------------------------------------------
+
+def bestfit_book_step(wf, ready, service):
+    """Book one ready task: best-fit among free workers, earliest-free
+    fallback when all are busy.
+
+    Fused key (the PR-3 trick): free workers (``wf <= ready``) rank by
+    ``wf`` — latest-freed-but-eligible wins, all keys >= 0 — busy workers
+    by ``-wf`` (< 0, so they lose to any free worker, and among them
+    ``argmax(-wf)`` IS the earliest-free fallback); ``-max(key)`` then
+    equals the booking delay floor, so ``start = max(ready, -max(key))``
+    needs no gather.  A ``ready`` of ``inf`` (unmaterialized / padding)
+    books nothing: worker -1, start/fin inf.  Returns (worker, start, fin).
+    """
+    live = ~jnp.isinf(ready)
+    key = jnp.where(wf <= ready, wf, -wf)
+    w = jnp.argmax(key)
+    start = jnp.maximum(ready, -jnp.max(key))
+    fin = start + service
+    return (jnp.where(live, w, -1), jnp.where(live, start, jnp.inf),
+            jnp.where(live, fin, jnp.inf))
+
+
+def blocked_bestfit_booking(wf0, ready, service, *, block: int,
+                            full: bool = True, unroll: int = 16,
+                            backend: str = "scan", interpret=None):
+    """Resolve one trial's whole ready-sorted stream of best-fit bookings.
+
+    ``ready``/``service`` are (N,) with N a multiple of ``block`` (pad with
+    ready=inf, service=0); ``wf0`` the (W,) entry free-at vector.  Returns
+    ``(fin, start, worker)`` when ``full`` else ``(fin,)`` — the non-full
+    form lets the stock fixed point over stage depth skip two (N,)-sized
+    outputs per estimation pass.
+
+    ``backend="scan"`` runs :func:`blocked_event_replay`; ``"pallas"``
+    dispatches the fused intra-block kernel
+    (:mod:`repro.kernels.queue_booking`), which keeps the whole block
+    resolution in VMEM on accelerators (``interpret`` defaults per
+    :func:`repro.kernels._compat.interpret_default`, so the same code path
+    runs — and is CI-tested — on CPU).
+    """
+    if backend == "pallas":
+        from repro.kernels.queue_booking.ops import book_stream
+        fin, start, worker, _ = book_stream(
+            ready[None], service[None], wf0[None], block=block,
+            interpret=interpret)
+        return (fin[0], start[0], worker[0]) if full else (fin[0],)
+    if backend != "scan":
+        raise ValueError(f"unknown booking backend {backend!r}")
+
+    def body(wf, ev):
+        w, start, fin = bestfit_book_step(wf, *ev)
+        out = (fin, start, w) if full else (fin,)
+        # widx=-1 already gates dead events out of the pool; fin is their
+        # (constant) inf, so the convergence check stays stable
+        return (w[None], fin[None]), out
+
+    _, outs = blocked_event_replay(body, wf0, (ready, service),
+                                   block=block, unroll=unroll)
+    return outs
+
+
+def blocked_sorted_booking(wf0, ready, service, *, block: int):
+    """Finish times of a ready-sorted best-fit booking stream, resolved
+    block-parallel through the order-statistic form of the recurrence.
+
+    Under ready-sorted FCFS the booked *worker* is interchangeable (any
+    policy that books a free worker when one exists and the earliest-free
+    otherwise leaves the same multiset of future-relevant free-at times —
+    EXPERIMENTS.md), so only the sorted pool matters and the start time
+    collapses to an order statistic:
+
+        st_i = max(r_i, c_i-th smallest of (pool_in ∪ {fin_j : j < i}))
+
+    with ``c_i`` the count of live events through ``i``.  That dependency
+    is strictly lower-triangular in ``fin``, so the same bounded Jacobi
+    fixed point applies — but errors now propagate only along *same-worker
+    chains* (a fin estimate that keeps its rank perturbs nothing), so the
+    pass count stays near (block bookings)/W even at high utilisation,
+    where the worker-identity Jacobi of :func:`blocked_event_replay`
+    degrades toward one event per pass.  The cost: worker ids are never
+    materialized — this is the measurement path; the trace path resolves
+    ids through the generic fixed point instead.
+
+    Each pass is one sort of the (W + B) pool tagged by availability rank
+    plus a cumulative-count selection — the "chunked max-plus scan" of the
+    blocked substrate.  Returns ``(fin,)`` shaped like ``ready`` (inf for
+    dead events); bitwise equal to the sequential scan's finish times.
+    """
+    W = int(wf0.shape[-1])
+    n = int(ready.shape[0])
+    block = int(block)
+    if n % block:
+        raise ValueError(f"stream length {n} not a multiple of {block}")
+    nb = n // block
+    idx = jnp.arange(block)
+    avail = jnp.concatenate([jnp.zeros(W, jnp.int32),
+                             1 + idx.astype(jnp.int32)])
+
+    def resolve(pool, ev):
+        r, s = ev
+        live = ~jnp.isinf(r)
+        c = jnp.cumsum(live)            # live bookings through event i
+
+        def one_pass(fin):
+            vals = jnp.concatenate([pool, fin])
+            order = jnp.argsort(vals)
+            v_s, a_s = vals[order], avail[order]
+            # element q is in event i's pool iff its availability rank
+            # a_s[q] <= i (0 = entry pool, j+1 = fin_j); the c_i-th
+            # included element of the sorted tape IS the order statistic
+            incl = a_s[None, :] <= idx[:, None]
+            cnt = jnp.cumsum(incl, axis=1)
+            hit = incl & (cnt == c[:, None])
+            sig = jnp.sum(jnp.where(hit, v_s, 0.0), axis=1)
+            st = jnp.maximum(r, sig)
+            return jnp.where(live, st + s, jnp.inf)
+
+        fin0 = jnp.where(live, r + s, jnp.inf)      # zero-queueing bound
+        fin1 = one_pass(fin0)
+
+        def cond(carry):
+            p, fin, prev = carry
+            return jnp.any(fin != prev) & (p < block)
+
+        def again(carry):
+            p, fin, _ = carry
+            return p + 1, one_pass(fin), fin
+
+        _, fin, _ = lax.while_loop(cond, again, (jnp.asarray(1), fin1, fin0))
+        # block exit: the c_B consumed values are exactly the c_B smallest
+        # of the pool ∪ fins (consume-min equivalence); keep the rest
+        tape = jnp.sort(jnp.concatenate([pool, fin]))
+        return lax.dynamic_slice(tape, (c[-1],), (W,)), fin
+
+    _, fin = lax.scan(resolve, jnp.sort(wf0), jax.tree_util.tree_map(
+        lambda a: a.reshape(nb, block), (ready, service)))
+    return (fin.reshape(n),)
+
+
+def stock_booking_fins(wf0, ready, service, *, block: int,
+                       backend: str = "scan", interpret=None):
+    """Finish times only — the form the stock stage-depth fixed point
+    consumes on every estimation pass.  Dispatch: ``block <= 1`` runs the
+    sequential oracle scan, larger blocks the order-statistic resolver,
+    ``backend="pallas"`` the fused VMEM kernel."""
+    if backend == "pallas" or block <= 1:
+        return blocked_bestfit_booking(
+            wf0, ready, service, block=max(block, 1), full=False,
+            backend=backend, interpret=interpret)
+    return blocked_sorted_booking(wf0, ready, service, block=block)

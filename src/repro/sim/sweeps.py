@@ -287,10 +287,12 @@ def open_loop_pair_plan(wl: VectorWorkload, configs, *, trials: int = 20_000,
 # of serializing on per-config host round-trips.
 
 @functools.lru_cache(maxsize=None)
-def _queue_raptor_core(jobs, W, A, F, K, seq_t, dep_t, dist, fail_prob):
+def _queue_raptor_core(jobs, W, A, F, K, seq_t, dep_t, dist, fail_prob,
+                       block, resolver):
     from repro.core.analytics import summarize_masked_batch
     from repro.sim.vector_queue import _raptor_trial_fn
-    trial = _raptor_trial_fn(jobs, W, A, F, K, seq_t, dep_t, dist, fail_prob)
+    trial = _raptor_trial_fn(jobs, W, A, F, K, seq_t, dep_t, dist, fail_prob,
+                             block, resolver)
 
     def core(keys, cfg, shared):
         rate, oh_mu, oh_sigma = cfg
@@ -304,11 +306,11 @@ def _queue_raptor_core(jobs, W, A, F, K, seq_t, dep_t, dist, fail_prob):
 
 @functools.lru_cache(maxsize=None)
 def _queue_stock_core(jobs, W, K, dep_t, dist, fail_prob, passes,
-                      has_extras):
+                      has_extras, block, backend):
     from repro.core.analytics import summarize_masked_batch
     from repro.sim.vector_queue import _stock_trial_fn
     trial = _stock_trial_fn(jobs, W, K, dep_t, dist, fail_prob, passes,
-                            has_extras)
+                            has_extras, block, backend)
 
     def core(keys, cfg, shared):
         rate, oh_mu, oh_sigma = cfg
@@ -326,8 +328,22 @@ def queue_pair_plan(sims, jobs: int, trials: int) -> SweepPlan:
     config axes, stock and raptor each a single static-shape bucket.  This
     is the driver the fig6/fig7 load and utilisation grids run through —
     the dispatch-bound event scans are where device sharding pays
-    near-linearly (see the module docstring)."""
+    near-linearly (see the module docstring).
+
+    The substrate block configuration (``QueueFlightSim.engine_config``)
+    is part of each bucket's static shape key alongside the padded event
+    counts — sims sharing a plan must agree on it, or they could not share
+    the bucket's compiled core."""
     s0 = sims[0]
+    r_blk, r_res = s0.engine_config("raptor")
+    s_blk, _ = s0.engine_config("stock")
+    for s in sims[1:]:
+        if (s.engine_config("raptor") != (r_blk, r_res)
+                or s.engine_config("stock")[0] != s_blk
+                or s.booking_backend != s0.booking_backend):
+            raise ValueError("sims in one queue plan must share the "
+                             "substrate (block, resolver, backend) config "
+                             "— it is part of the bucket key")
     rates = jnp.array([s.rate_hz for s in sims])
     mus = jnp.array([s.oh_mu for s in sims])
     sigmas = jnp.array([s.oh_sigma for s in sims])
@@ -340,7 +356,7 @@ def queue_pair_plan(sims, jobs: int, trials: int) -> SweepPlan:
                 int(jobs), s0.W, s0.A, s0.flight, len(wl.tasks),
                 tuple(map(tuple, s0._seq.tolist())),
                 tuple(map(tuple, s0._dep.tolist())),
-                wl.dist, wl.fail_prob),
+                wl.dist, wl.fail_prob, r_blk, r_res),
             s0._keys(trials, True),
             (rates, mus, sigmas),
             (s0.rho, jnp.asarray(wl.task_means, dtype=jnp.float32),
@@ -351,7 +367,7 @@ def queue_pair_plan(sims, jobs: int, trials: int) -> SweepPlan:
                 int(jobs), s0.W, len(s0._smeans),
                 tuple(map(tuple, s0._sdep.tolist())),
                 wl.dist, wl.fail_prob, s0._spasses,
-                bool(s0._sextras.any())),
+                bool(s0._sextras.any()), s_blk, s0.booking_backend),
             s0._keys(trials, False),
             (rates, mus, sigmas),
             (s0.rho, jnp.asarray(s0._smeans), jnp.asarray(s0._sextras),

@@ -122,7 +122,8 @@ def _overhead_draws(key, shape, med, p90):
 # one flight trial: fixed-trip event scan (vmapped over the batch)
 # --------------------------------------------------------------------------
 
-def _flight_trial(z_seq, fail_seq, t_join, seq, slat, active=None):
+def _flight_trial(z_seq, fail_seq, t_join, seq, slat, active=None,
+                  num_events: int = None):
     """Replay one flight race.
 
     Everything per-member is laid out in that member's *sequence order* so
@@ -135,6 +136,12 @@ def _flight_trial(z_seq, fail_seq, t_join, seq, slat, active=None):
     seq:      (F, K) member task orders (cyclic shifts or per-trial perms)
     active:   (F,) bool or None — padding mask for the batched sweeps;
               inactive members never join (fin stays inf, no candidates)
+    num_events: tighter exact scan budget when the caller can prove one —
+              with ``fail_prob == 0`` every event is the completion of a
+              *distinct* task (success broadcasts preempt any peer racing
+              the same task before it could complete it again), so K
+              events bound the race instead of the conservative F*K
+              (tests/test_sim_vector.py pins exactness)
     Returns (response_time, ok).
     """
     F, K = z_seq.shape
@@ -179,9 +186,10 @@ def _flight_trial(z_seq, fail_seq, t_join, seq, slat, active=None):
         # terminal states: every task complete, or every member exhausted
         all_idle = jnp.all(jnp.isinf(fin2))
         terminal = (complete | all_idle) & ~finished
-        keep = lambda new, old: jnp.where(finished, old, new)
-        carry2 = (keep(done2, done), keep(attempted2, attempted),
-                  keep(cur2, cur), keep(curfail2, curfail), keep(fin2, fin),
+        # no per-element freeze needed past the terminal event: fin is all
+        # inf and stays so (starts are priced off t = inf), so post-
+        # terminal state drift cannot reach the latched ok/t_resp outputs
+        carry2 = (done2, attempted2, cur2, curfail2, fin2,
                   finished | terminal,
                   jnp.where(terminal, complete, ok),
                   jnp.where(terminal, t, t_resp))
@@ -191,8 +199,9 @@ def _flight_trial(z_seq, fail_seq, t_join, seq, slat, active=None):
               jnp.array(False), jnp.array(False), jnp.array(jnp.inf))
     # unrolling removes the scan's per-step dispatch overhead — the hot
     # path for small flights is a handful of steps (see BENCH_sim.json)
+    steps = int(num_events) if num_events is not None else F * K
     (_, _, _, _, _, finished, ok, t_resp), _ = lax.scan(
-        step, carry0, None, length=F * K, unroll=min(F * K, 8))
+        step, carry0, None, length=steps, unroll=min(steps, 8))
     return t_resp, ok
 
 
@@ -225,6 +234,8 @@ def _raptor_batch(key, *, trials, flight, num_tasks, num_azs, dist,
     # member 0 joins at the arrival overhead; later members pay a second
     # control-plane hop (the fork's recursive invocation, §3.3.2)
     t_join = oh0[:, None] + jnp.where(jnp.arange(F) == 0, 0.0, ohm)
+    # error-free races complete in exactly K events (see _flight_trial)
+    events = K if fail_prob == 0.0 else F * K
     if sequences == "random":
         # fresh uniform order per (trial, member) — the paper-gap probe for
         # the F >> K plateau (cyclic shifts duplicate orders; see ROADMAP)
@@ -233,7 +244,8 @@ def _raptor_batch(key, *, trials, flight, num_tasks, num_azs, dist,
         z_seq = jnp.take_along_axis(z, perm, axis=2)
         fail_seq = jnp.take_along_axis(fail, perm, axis=2)
         t_resp, ok = jax.vmap(
-            lambda zz, ff, tj, sq: _flight_trial(zz, ff, tj, sq, slat))(
+            lambda zz, ff, tj, sq: _flight_trial(zz, ff, tj, sq, slat,
+                                                 num_events=events))(
                 z_seq, fail_seq, t_join, perm)
         return t_resp, ok, fail
     seq = jnp.stack([jnp.roll(jnp.arange(K), -(m % K)) for m in range(F)])
@@ -242,7 +254,8 @@ def _raptor_batch(key, *, trials, flight, num_tasks, num_azs, dist,
     z_seq = jnp.take_along_axis(z, seq_b, axis=2)
     fail_seq = jnp.take_along_axis(fail, seq_b, axis=2)
     t_resp, ok = jax.vmap(
-        lambda zz, ff, tj: _flight_trial(zz, ff, tj, seq, slat))(
+        lambda zz, ff, tj: _flight_trial(zz, ff, tj, seq, slat,
+                                         num_events=events))(
             z_seq, fail_seq, t_join)
     return t_resp, ok, fail
 
@@ -307,8 +320,10 @@ def _raptor_sweep_core(key, flight, num_azs, rho, mean, offset, cv,
     seq_b = jnp.broadcast_to(seq, (trials, F, K))
     z_seq = jnp.take_along_axis(z, seq_b, axis=2)
     fail_seq = jnp.take_along_axis(fail, seq_b, axis=2)
+    events = K if fail_prob == 0.0 else F * K
     t_resp, ok = jax.vmap(
-        lambda zz, ff, tj: _flight_trial(zz, ff, tj, seq, slat, active))(
+        lambda zz, ff, tj: _flight_trial(zz, ff, tj, seq, slat, active,
+                                         num_events=events))(
             z_seq, fail_seq, t_join)
     # a padded member's error draw never ran, so it must be neutral in the
     # all-attempts-errored reduction (flight_fail_rate_batch ANDs over the

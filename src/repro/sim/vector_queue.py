@@ -25,11 +25,28 @@ Structure (all on-device, ``vmap`` over trials and — for sweeps — configs):
 * the stock path replays the fork-join at TASK granularity: every job's
   per-task ready-time streams (arrival + overhead for roots, dependency
   finish + storage hop + control-plane draw for staged tasks) are merged
-  into ONE sorted event stream per trial, and a ``lax.scan`` over that
-  stream books a worker per *task* in ready order — the scalar oracle's
-  task-level FCFS backlog.  Staged ready times depend on queueing, so they
-  are materialized by a bounded fixed point over stage depth (see
-  ``_stock_trial_fn``); dep-free stock graphs are exact in one pass.
+  into ONE sorted event stream per trial, and the replay books a worker
+  per *task* in ready order — the scalar oracle's task-level FCFS backlog.
+  Staged ready times depend on queueing, so they are materialized by a
+  bounded fixed point over stage depth (see ``_stock_trial_fn``);
+  dep-free stock graphs are exact in one pass.
+
+Both closed-loop replays run on the blocked event-replay substrate
+(:mod:`repro.sim.scan_core`): the per-trial event stream is chunked into
+blocks of ``block`` events, all bookings inside a block are resolved by a
+bounded parallel fixed point over the worker free-at vector (raptor /
+trace: the worker-identity Jacobi; stock measurement: the order-statistic
+form), and only that W-vector crosses blocks — sequential depth drops
+from O(jobs) to O(jobs/block · passes) while the intra-block work
+vectorizes across the (trials × block) plane.  The DAG flight race rides
+the same substrate: inside a block it runs once as a (block,)-wide batch
+per fixed-point pass instead of once per job event.  ``block=1`` is
+bit-for-bit the pre-blocking sequential scan and remains the oracle path
+(tests/test_queue_properties.py pins block-size invariance); the default
+resolves per engine and backend (``auto_config``): the fixed point is the
+depth-reduction (accelerator) mode — its pass count tracks intra-block
+queueing chains, which HA placement couples to whole cascades — and the
+fused unrolled chunks are the host-throughput mode (EXPERIMENTS.md).
 
 Arrival rate, rho, and the Table-6 overhead parameters are *traced*
 arguments, so a whole load sweep shares one compilation via ``vmap`` over
@@ -68,6 +85,8 @@ from jax import lax
 
 from repro.core.analytics import summarize_batch
 from repro.sim.cluster import OverheadModel, lognormal_params
+from repro.sim.scan_core import (blocked_bestfit_booking,
+                                 blocked_event_replay, stock_booking_fins)
 from repro.sim.vector import unit_draws
 from repro.sim.workloads import (KEYGEN_CV, KEYGEN_MEAN_MS, KEYGEN_OFFSET_MS,
                                  THUMB_CV, THUMB_DOWNLOAD_MS, THUMB_RESIZE_MS,
@@ -200,7 +219,8 @@ def _topo_order(dep_mask: np.ndarray):
 # --------------------------------------------------------------------------
 
 def dag_flight_trial(z_seq, fail_seq, t_join, seq, dep_mask, slat,
-                     direct_start: bool = False):
+                     direct_start: bool = False, num_events: int = None,
+                     no_failures: bool = False):
     """Replay one flight of a (possibly DAG) manifest.
 
     Like ``sim.vector._flight_trial`` but members must respect ``dep_mask``
@@ -216,6 +236,23 @@ def dag_flight_trial(z_seq, fail_seq, t_join, seq, dep_mask, slat,
     can never find its first task already completed mid-flight) skips the
     F join events: members begin mid-attempt at ``t_join`` and the scan
     shrinks from F*(K+1) to F*K trips — the fast path for the fig6 sweep.
+
+    ``num_events`` overrides the scan trip count with a tighter exact
+    budget when the caller can prove one.  The load-bearing case: with
+    ``fail_prob == 0`` every non-join event is the completion of a
+    *distinct* task (a success broadcast preempts any peer mid-that-task,
+    so no task completes twice, and a parked member's wake rides the
+    completion event that unblocks it), so K completions + the F joins
+    bound the replay — the closed-loop engines' races run at K instead of
+    F*K trips, the hottest-loop win of the blocked rewrite
+    (tests/test_queue_properties.py pins exactness against the full
+    budget bitwise).
+
+    ``no_failures=True`` (static) additionally drops the per-member
+    attempted mask from the carry: an error-free attempt only ever ends
+    because its task completed (by the member itself, or by the peer
+    whose broadcast preempted it), so "attempted by me" implies "done"
+    and the head-of-line candidate mask collapses to ``~done[seq]``.
     """
     F, K = z_seq.shape
     # dep_mask is a trace-time constant (the manifest), so a dep-free
@@ -235,6 +272,8 @@ def dag_flight_trial(z_seq, fail_seq, t_join, seq, dep_mask, slat,
         cur0 = jnp.full((F,), -1)
         curfail0 = jnp.zeros((F,), dtype=bool)
         fin0 = t_join
+    if no_failures:
+        attempted0 = None         # implied by `done` (see docstring)
 
     def step(carry, _):
         (done, attempted, cur, curfail, fin, released, trel,
@@ -252,8 +291,10 @@ def dag_flight_trial(z_seq, fail_seq, t_join, seq, dep_mask, slat,
         busy_after = busy & ~freed
         idle = ~busy_after & ~released
         # next task per member: first in its shifted order neither complete
-        # nor already attempted by this member (head-of-line: no skipping)
-        cand = (~done2[seq]) & (~attempted)
+        # nor already attempted by this member (head-of-line: no skipping);
+        # error-free attempts end only because their task completed, so
+        # the attempted mask is implied by `done` and statically elided
+        cand = (~done2[seq]) if no_failures else (~done2[seq]) & ~attempted
         has_next = jnp.any(cand, axis=1)
         j_hot = k_ar[None, :] == jnp.argmax(cand, axis=1)[:, None]
         nxt = jnp.sum(jnp.where(j_hot, seq, 0), axis=1)
@@ -270,7 +311,8 @@ def dag_flight_trial(z_seq, fail_seq, t_join, seq, dep_mask, slat,
         cur2 = jnp.where(can_start, nxt, jnp.where(busy_after, cur, -1))
         curfail2 = jnp.where(can_start, f_next,
                              jnp.where(busy_after, curfail, False))
-        attempted2 = attempted | (j_hot & can_start[:, None])
+        attempted2 = (None if no_failures
+                      else attempted | (j_hot & can_start[:, None]))
         newly_rel = idle & ~has_next
         released2 = released | newly_rel
         trel2 = jnp.where(newly_rel, t, trel)
@@ -279,11 +321,12 @@ def dag_flight_trial(z_seq, fail_seq, t_join, seq, dep_mask, slat,
         terminal = (complete | no_busy) & ~finished
         trel2 = jnp.where(terminal & ~released2, t, trel2)
         released2 = released2 | terminal
-        keep = lambda new, old: jnp.where(finished, old, new)
-        carry2 = (keep(done2, done), keep(attempted2, attempted),
-                  keep(cur2, cur), keep(curfail2, curfail),
-                  keep(fin2, fin), keep(released2, released),
-                  keep(trel2, trel), finished | terminal,
+        # no per-element freeze needed past the terminal event: fin is all
+        # inf (so t = inf and nothing can start or newly release), done/
+        # attempted/released are monotone, and the ok/t_resp outputs latch
+        # on `terminal`, which `finished` stops from refiring
+        carry2 = (done2, attempted2, cur2, curfail2, fin2, released2,
+                  trel2, finished | terminal,
                   jnp.where(terminal, complete, ok),
                   jnp.where(terminal, t, t_resp))
         return carry2, None
@@ -291,25 +334,84 @@ def dag_flight_trial(z_seq, fail_seq, t_join, seq, dep_mask, slat,
     carry0 = (done0, attempted0, cur0, curfail0, fin0, released0, trel0,
               jnp.array(False), jnp.array(False), jnp.array(jnp.inf))
     # F join events (unless direct_start) + at most F*K attempt completions
-    steps = F * K if direct_start else F * (K + 1)
+    steps = (int(num_events) if num_events is not None
+             else (F * K if direct_start else F * (K + 1)))
     (_, _, _, _, _, _, trel, _, ok, t_resp), _ = lax.scan(
         step, carry0, None, length=steps, unroll=min(steps, 8))
     return t_resp, ok, trel
+
+
+def _race_f2k2(z_seq, t_join):
+    """Closed form of the error-free F=2, K=2 dep-free direct-start race —
+    the Table-7/fig6 hot case (keygen, the exponential theory probes).
+
+    With no failures and distinct first tasks there is exactly one event
+    sequence shape: the earlier first-attempt completion (``t1``) marks
+    its task done and its member chains IMMEDIATELY into the other task
+    (start = t1, no stream hop — the finisher chains at the event time);
+    the flight then completes at the earlier of the other member's
+    first-attempt finish and that chained second attempt, and BOTH
+    members release at the terminal event (the loser is preempted by the
+    terminal broadcast mid-task, the winner releases on completion).  All
+    three operations are the exact adds/selections the generic event scan
+    performs, so this is bitwise the scan's result — pinned against the
+    ``block=1`` oracle by tests/test_queue_properties.py.
+    """
+    f_first = t_join + z_seq[:, 0]
+    t1 = jnp.min(f_first)
+    f_other = jnp.max(f_first)
+    e_hot = jnp.arange(2) == jnp.argmin(f_first)
+    second = t1 + jnp.sum(jnp.where(e_hot, z_seq[:, 1], 0.0))
+    t_resp = jnp.minimum(f_other, second)
+    return t_resp, jnp.array(True), jnp.full((2,), t_resp)
 
 
 # --------------------------------------------------------------------------
 # closed-loop trial bodies (one whole arrival stream per trial)
 # --------------------------------------------------------------------------
 
+def auto_config(engine: str) -> Tuple[int, str]:
+    """Default (block, resolver) per engine and backend.
+
+    Measured on the recording box (EXPERIMENTS.md throughput-vs-B table):
+
+    * raptor — bookings are placement-coupled (the chosen worker's AZ
+      selects the shared service draws), so fixpoint passes track whole
+      intra-block queueing cascades; the unrolled resolver (fused blocks
+      of 8, tight race budget) is the throughput configuration on hosts,
+      while accelerator runs prefer the depth-reduced fixpoint;
+    * stock — worker identity is interchangeable under ready-sorted FCFS,
+      so the order-statistic fixpoint converges in a few passes; still,
+      on CPU the fused sequential chunks already amortize the dispatch
+      cost the fixpoint exists to hide, so the oracle path stays default
+      there and the fixpoint is the accelerator configuration.
+    """
+    accel = jax.default_backend() not in ("cpu",)
+    if engine == "stock":
+        return (64, "fixpoint") if accel else (1, "fixpoint")
+    return (64, "fixpoint") if accel else (8, "unrolled")
+
+
 @functools.lru_cache(maxsize=None)
 def _raptor_trial_fn(jobs: int, W: int, A: int, F: int, K: int,
                      seq_t: tuple, dep_t: tuple, dist: str,
-                     fail_prob: float, trace: bool = False):
+                     fail_prob: float, block: int = 1,
+                     resolver: str = "fixpoint", trace: bool = False):
     """Per-trial closed-loop raptor replay, closed over the static manifest.
 
     Traced args: arrival rate, rho, per-task means, offset, cv, stage
     overhead, stream latency, and the Table-6 lognormal (mu, sigma) — so a
     (load x rho) sweep vmaps over configs with one compilation.
+
+    ``block``/``resolver`` chunk the arrival stream through the blocked
+    substrate (:func:`repro.sim.scan_core.blocked_event_replay`): the
+    fixpoint resolver re-books a whole block as one (block,)-wide batch
+    per pass — exact because a job observes earlier jobs only through the
+    max-plus worker free-at vector — while the unrolled resolver fuses
+    each block into one straight-line region; blocked configs also run
+    the races on the tight K-completion event budget.  ``block=1`` is the
+    sequential oracle scan with the conservative full budget, bit-for-bit
+    the pre-blocking engine.
 
     ``trace=True`` additionally returns ``(arrival, dispatch, worker,
     release)`` per (job, member) — the placement/booking trace the
@@ -332,17 +434,40 @@ def _raptor_trial_fn(jobs: int, W: int, A: int, F: int, K: int,
         # (threefry invocations dominate the batch cost on CPU)
         sx = unit_draws(k_s, (jobs, A + F, K), dist, cv)
         s, x = sx[:, :A, :], sx[:, A:, :]
-        if fail_prob == 0.0:
-            fail = jnp.zeros((jobs, F, K), dtype=bool)
-        else:
-            fail = jax.random.bernoulli(k_f, fail_prob, (jobs, F, K))
         oh = jnp.exp(oh_mu + oh_sigma * jax.random.normal(k_o, (jobs, F + 1)))
         # member 0 pays the arrival overhead; later members a second
         # control-plane hop (the fork's recursive invocation, §3.3.2)
         t_oh = oh[:, :1] + jnp.where(jnp.arange(F) == 0, 0.0, oh[:, 1:])
-        seq_b = jnp.broadcast_to(seq, (F, K))
-        fail_seq = jnp.take_along_axis(fail, jnp.broadcast_to(
-            seq, (jobs, F, K)), axis=2)
+        # The service mixture for EVERY possible member->AZ placement is
+        # precomputed outside the replay — with the oracle's exact
+        # arithmetic order per element, so the hot loop's one-hot row
+        # select (an exact selection) leaves the blocked core bitwise the
+        # sequential oracle.  (jobs, A, F, K): z_case[j, a, m] = member
+        # m's sequence-ordered attempt times were it placed in AZ a.
+        z_case = (rho * s[:, :, None, :] + (1 - rho) * x[:, None, :, :]) \
+            * means + offset + stage_oh
+        z_case = jnp.take_along_axis(
+            z_case, jnp.broadcast_to(seq, (jobs, A, F, K)), axis=3)
+        if fail_prob == 0.0:
+            fail_seq = None
+        else:
+            fail = jax.random.bernoulli(k_f, fail_prob, (jobs, F, K))
+            fail_seq = jnp.take_along_axis(fail, jnp.broadcast_to(
+                seq, (jobs, F, K)), axis=2)
+        # with no injected errors every race event is a distinct task
+        # completion, so K completions (+ the F joins when members cannot
+        # start mid-attempt) bound the race exactly (dag_flight_trial),
+        # and the F=2/K=2 dep-free case (the fig6 hot path) close-forms
+        # entirely (_race_f2k2).  The block=1 oracle path keeps the
+        # conservative full budget and the generic event scan for every
+        # workload; the invariance tests prove both reductions against it
+        if block <= 1:
+            race_events, closed_form = None, False
+        else:
+            race_events = ((K if fail_prob == 0.0 else F * K)
+                           + (0 if direct else F))
+            closed_form = (F == 2 and K == 2 and fail_prob == 0.0
+                           and direct and not np.asarray(dep_t).any())
         # placement tie-break randomness: the scalar sim picks uniformly
         # among the free (fresh-AZ-preferred) workers.  A deterministic
         # earliest-free pick keeps flight release pairs perfectly
@@ -353,8 +478,12 @@ def _raptor_trial_fn(jobs: int, W: int, A: int, F: int, K: int,
         # so the conditional pick stays uniform.
         prio = jax.random.uniform(k_p, (jobs, W))
 
-        def job_step(wfree, inp):
-            arrival, sj, xj, fj, ohj, prj = inp
+        def job_body(wfree, inp):
+            if fail_seq is None:
+                arrival, zcj, ohj, prj = inp
+                fj = jnp.zeros((F, K), dtype=bool)
+            else:
+                arrival, zcj, fj, ohj, prj = inp
             # HA placement (scalar _pick_worker_for + backlog dispatch).
             # Free at arrival: pick a uniform-random free worker in an AZ
             # the flight hasn't used, else a uniform-random free worker.
@@ -364,47 +493,74 @@ def _raptor_trial_fn(jobs: int, W: int, A: int, F: int, K: int,
             # pairs suppresses the scalar sim's ~13% high-load co-location
             # and with it the congestion the paper's Kafka-queue regime
             # shows — see tests/test_sim_queue.py.)
+            # one-hot arithmetic only — vmapped dynamic gathers/scatters
+            # (w_az[w], used_az.at[az], wf.at[w]) cripple the replay
             wf = wfree
-            used_az = jnp.zeros(A, dtype=bool)
+            fresh = jnp.ones(W, dtype=bool)      # workers in unused AZs
             t_disp, widx, m_az = [], [], []
             for m in range(F):
                 t_any = jnp.min(wf)
                 contended = t_any > arrival
                 free = wf <= arrival
-                elig = (~used_az[w_az]) & free
+                elig = fresh & free
                 # one argmax: fresh free workers rank in (1, 2], other free
                 # in (0, 1], busy at -1 — random-uniform within each tier
                 key = jnp.where(elig, prj + 1.0,
                                 jnp.where(free, prj, -1.0))
                 w = jnp.where(contended, jnp.argmin(wf), jnp.argmax(key))
-                az = w_az[w]
-                used_az = used_az.at[az].set(True)
+                w_hot = jnp.arange(W) == w
+                az = jnp.sum(jnp.where(w_hot, w_az, 0))
+                fresh = fresh & (w_az != az)
                 t_disp.append(jnp.maximum(arrival, t_any))
                 widx.append(w)
                 m_az.append(az)
-                wf = wf.at[w].set(jnp.inf)
+                wf = jnp.where(w_hot, jnp.inf, wf)
             t_disp = jnp.stack(t_disp)
             widx = jnp.stack(widx)
             m_az = jnp.stack(m_az)
             # the AZ-shared S block follows the *actual* placement, so
             # co-located members (queue pressure) re-correlate like the
-            # scalar sim
-            zj = (rho * sj[m_az, :] + (1 - rho) * xj) * means \
-                + offset + stage_oh
-            z_seq = jnp.take_along_axis(zj, seq_b, axis=1)
-            t_resp, ok, t_rel = dag_flight_trial(
-                z_seq, fj, t_disp + ohj, seq, dep_mask, slat,
-                direct_start=direct)
-            # max guards the flight-finished-before-dispatch case (the
-            # scalar sim skips the dispatch; the worker was never taken)
-            wfree2 = wfree.at[widx].max(t_rel)
+            # scalar sim; one-hot row select, no in-loop gathers
+            az_hot = jnp.arange(A)[:, None] == m_az[None, :]     # (A, F)
+            z_seq = jnp.sum(jnp.where(az_hot[:, :, None], zcj, 0.0),
+                            axis=0)
+            if closed_form:
+                t_resp, ok, t_rel = _race_f2k2(z_seq, t_disp + ohj)
+            else:
+                t_resp, ok, t_rel = dag_flight_trial(
+                    z_seq, fj, t_disp + ohj, seq, dep_mask, slat,
+                    direct_start=direct, num_events=race_events,
+                    no_failures=fail_prob == 0.0)
+            # the max-fold into the free-at vector guards the flight-
+            # finished-before-dispatch case (the scalar sim skips the
+            # dispatch; the worker was never taken); a padded (dead) job
+            # must book nothing, so its releases are gated to -inf
+            live = ~jnp.isinf(arrival)
+            rel = jnp.where(live, t_rel, -jnp.inf)
             out = (t_resp - arrival, ok)
             if trace:
                 out = out + (t_disp, widx, t_rel)
-            return wfree2, out
+            return (widx, rel), out
 
-        _, outs = lax.scan(
-            job_step, jnp.zeros(W), (arrivals, s, x, fail_seq, t_oh, prio))
+        if fail_seq is None:
+            events = (arrivals, z_case, t_oh, prio)
+            fills = (jnp.inf, 0.0, 0.0, 0.0)
+        else:
+            events = (arrivals, z_case, fail_seq, t_oh, prio)
+            fills = (jnp.inf, 0.0, False, 0.0, 0.0)
+        npad = (-(-jobs // block) * block
+                if resolver == "fixpoint" and block > 1 else jobs)
+        if npad > jobs:
+            # pad the stream up to whole blocks with dead (arrival = inf)
+            # jobs; their bookings are gated out and their outputs sliced
+            events = tuple(
+                jnp.concatenate([a, jnp.full((npad - jobs,) + a.shape[1:],
+                                             fill, a.dtype)])
+                for a, fill in zip(events, fills))
+        _, outs = blocked_event_replay(job_body, jnp.zeros(W), events,
+                                       block=block, resolver=resolver)
+        if npad > jobs:
+            outs = jax.tree_util.tree_map(lambda a: a[:jobs], outs)
         if trace:
             resp, ok, t_disp, widx, t_rel = outs
             return resp, ok, (arrivals, t_disp, widx, t_rel)
@@ -417,18 +573,24 @@ def _raptor_trial_fn(jobs: int, W: int, A: int, F: int, K: int,
 @functools.lru_cache(maxsize=None)
 def _stock_trial_fn(jobs: int, W: int, K: int, dep_t: tuple,
                     dist: str, fail_prob: float, passes: int,
-                    has_extras: bool = False, trace: bool = False):
+                    has_extras: bool = False, block: int = 1,
+                    backend: str = "scan", trace: bool = False):
     """Per-trial closed-loop stock replay at TASK granularity (task FCFS).
 
     The scalar oracle's backlog is one FIFO of *tasks*: a task joins the
     queue the moment its stage hops elapse and takes the next worker, so at
     high load the stages of different jobs interleave freely.  This replay
     reproduces that discipline: all ``jobs * K`` per-task ready-time
-    streams are merged into one sorted event stream and a ``lax.scan``
-    books a worker per *task* in ready order (best-fit: the worker freed
-    latest but still by the ready time, else the earliest-free — both are
-    FCFS-equivalent under ready-sorted processing, best-fit keeps earlier
-    idle holes open for the trace).
+    streams are merged into one sorted event stream and the blocked
+    substrate books a worker per *task* in ready order (best-fit: the
+    worker freed latest but still by the ready time, else the
+    earliest-free — both are FCFS-equivalent under ready-sorted
+    processing, best-fit keeps earlier idle holes open for the trace).
+    ``block`` chunks that stream (``scan_core.stock_booking_fins``: the
+    order-statistic fixed point, or the Pallas VMEM kernel when
+    ``backend="pallas"``); the trace's final pass resolves worker ids
+    through the generic fixed point at the same block size.  ``block=1``
+    is bit-for-bit the pre-blocking sequential scan.
 
     Staged ready times depend on queueing (a map's ready is split's finish)
     so they are materialized by a bounded fixed point over stage depth:
@@ -478,6 +640,8 @@ def _stock_trial_fn(jobs: int, W: int, K: int, dep_t: tuple,
                            arrivals[:, None] + oh0[:, None], jnp.inf)
         z_flat = z.reshape(N)
 
+        npad = -(-N // block) * block
+
         def book(ready, full):
             # ONE merged event stream: every task of every job, ready
             # order.  The sort need not be stable: exact ties only occur
@@ -488,42 +652,25 @@ def _stock_trial_fn(jobs: int, W: int, K: int, dep_t: tuple,
             order = jnp.argsort(ready.reshape(N), stable=False)
             r_s = ready.reshape(N)[order]
             z_s = z_flat[order]
-
-            def step(wf, inp):
-                # one-hot arithmetic only: per-trial dynamic gathers and
-                # scatters cripple the vmapped scan on the CPU backend.
-                # Fused best-fit key: free workers (wf <= r) rank by wf
-                # (latest-freed-but-eligible wins, all keys >= 0), busy
-                # workers by -wf (< 0, so they lose to any free worker,
-                # and among them argmax(-wf) IS the earliest-free
-                # fallback); -max(key) then equals the booking delay
-                # floor, so start = max(r, -max(key)) needs no gather.
-                r, s = inp
-                live = ~jnp.isinf(r)          # unmaterialized: skip booking
-                key = jnp.where(wf <= r, wf, -wf)
-                w = jnp.argmax(key)
-                w_hot = jnp.arange(W) == w
-                st = jnp.maximum(r, -jnp.max(key))
-                f = st + s
-                wf2 = jnp.where(w_hot & live, f, wf)
-                # start/worker are emitted only on the trace's final pass;
-                # the fixed point itself just needs finish times (each
-                # dropped output is a (jobs*K,) scatter saved per pass)
-                out = (jnp.where(live, f, jnp.inf),)
-                if full:
-                    out = out + (jnp.where(live, st, jnp.inf),
-                                 jnp.where(live, w, -1))
-                return wf2, out
-
-            # unrolling trims the scan's per-step dispatch overhead — the
-            # stream is long (jobs * K events) and the body is tiny
-            _, outs = lax.scan(step, jnp.zeros(W), (r_s, z_s), unroll=16)
-            f = jnp.zeros(N).at[order].set(outs[0]).reshape(jobs, K)
+            if npad > N:
+                # dead padding (ready = inf) books nothing and sorts last
+                r_s = jnp.concatenate([r_s, jnp.full((npad - N,), jnp.inf)])
+                z_s = jnp.concatenate([z_s, jnp.zeros((npad - N,))])
             if not full:
-                return f, None, None
-            st = jnp.zeros(N).at[order].set(outs[1]).reshape(jobs, K)
+                # the stage-depth fixed point only consumes finish times;
+                # start/worker are resolved on the trace's final pass (each
+                # dropped output is a (jobs*K,) scatter saved per pass)
+                fins, = stock_booking_fins(jnp.zeros(W), r_s, z_s,
+                                           block=block, backend=backend)
+                return (jnp.zeros(N).at[order].set(fins[:N])
+                        .reshape(jobs, K), None, None)
+            fins, sts, wks = blocked_bestfit_booking(
+                jnp.zeros(W), r_s, z_s, block=block, full=True,
+                backend=backend)
+            f = jnp.zeros(N).at[order].set(fins[:N]).reshape(jobs, K)
+            st = jnp.zeros(N).at[order].set(sts[:N]).reshape(jobs, K)
             wk = jnp.zeros(N, jnp.int32).at[order].set(
-                outs[2]).reshape(jobs, K)
+                wks[:N]).reshape(jobs, K)
             return f, st, wk
 
         def refresh(fin):
@@ -549,6 +696,7 @@ def _stock_trial_fn(jobs: int, W: int, K: int, dep_t: tuple,
 
 @functools.lru_cache(maxsize=None)
 def _raptor_runner(jobs, W, A, F, K, seq_t, dep_t, dist, fail_prob,
+                   block: int = 1, resolver: str = "fixpoint",
                    trace: bool = False):
     """Jitted (trials,)-vmapped raptor runner, cached so repeated ``run()``
     calls reuse the compiled executable.  Config sweeps no longer live
@@ -556,15 +704,16 @@ def _raptor_runner(jobs, W, A, F, K, seq_t, dep_t, dist, fail_prob,
     same per-trial body over the config axis and shards it over the mesh.
     """
     trial = _raptor_trial_fn(jobs, W, A, F, K, seq_t, dep_t, dist,
-                             fail_prob, trace)
+                             fail_prob, block, resolver, trace)
     return jax.jit(jax.vmap(trial, in_axes=(0,) + (None,) * 9))
 
 
 @functools.lru_cache(maxsize=None)
 def _stock_runner(jobs, W, K, dep_t, dist, fail_prob, passes,
-                  has_extras: bool = False, trace: bool = False):
+                  has_extras: bool = False, block: int = 1,
+                  backend: str = "scan", trace: bool = False):
     trial = _stock_trial_fn(jobs, W, K, dep_t, dist, fail_prob,
-                            passes, has_extras, trace)
+                            passes, has_extras, block, backend, trace)
     return jax.jit(jax.vmap(trial, in_axes=(0,) + (None,) * 9))
 
 
@@ -615,7 +764,8 @@ class QueueFlightSim:
                  num_azs: int = 3, flight: int = None, rho: float = 0.95,
                  load: str = "medium", arrival_rate_hz: float = None,
                  stream_latency_ms: float = 0.5, seed: int = 0,
-                 stock_extra_passes: int = 1):
+                 stock_extra_passes: int = 1, block: int = None,
+                 resolver: str = "auto", booking_backend: str = "scan"):
         """``stock_extra_passes``: extra fixed-point iterations of the
         task-FCFS stock schedule beyond the ``stage_depth + 1`` needed to
         materialize every ready time.  Dep-free stock graphs (keygen,
@@ -623,7 +773,21 @@ class QueueFlightSim:
         (wordcount) each extra pass re-sorts the merged event stream with
         self-consistent ready estimates — wordcount at util 0.75 already
         sits within ~1% of the scalar oracle at 0 extras and is converged
-        at 1 (tests/test_sim_queue.py)."""
+        at 1 (tests/test_sim_queue.py).
+
+        ``block``/``resolver``: the blocked event-replay configuration
+        (``sim/scan_core.py``).  Results are block-size and resolver
+        invariant (bitwise — tests/test_queue_properties.py), so these are
+        pure performance knobs: ``block=None``/``resolver="auto"``
+        resolves per engine and backend via :func:`auto_config`;
+        ``block=1`` forces the sequential oracle scan (conservative race
+        budget — bit-for-bit the pre-blocking engine); larger blocks run
+        the chunked substrate with ``resolver`` "fixpoint" (bounded
+        parallel fixed point, the depth-reduction mode) or "unrolled"
+        (fused sequential chunks, the host-throughput mode).
+        ``booking_backend``: "scan" (the jnp substrate) or "pallas" (the
+        fused VMEM booking kernel, ``repro.kernels.queue_booking``) for
+        the stock stream."""
         self.wl = wl
         self.W = int(num_workers)
         self.A = int(num_azs)
@@ -641,6 +805,12 @@ class QueueFlightSim:
         self.rate_hz = float(
             arrival_rate_hz if arrival_rate_hz is not None
             else _rate_for_load(wl.work_est_ws, self.W, load))
+        # offered utilisation (service work / capacity), for reference and
+        # for sizing windows; the substrate config resolves per engine
+        self.utilization = self.rate_hz * wl.work_est_ws / self.W
+        self._block = None if block is None else int(block)
+        self.resolver = str(resolver)
+        self.booking_backend = str(booking_backend)
         ha = self.A > 1
         self.oh_mu, self.oh_sigma = lognormal_params(
             *OverheadModel.TABLE[(ha, load)])
@@ -664,19 +834,33 @@ class QueueFlightSim:
                          else self._sdepth + 1 + int(stock_extra_passes))
 
     # -- compiled runners ------------------------------------------------
+    def engine_config(self, engine: str) -> Tuple[int, str]:
+        """Resolved (block, resolver) for ``engine`` ("raptor"/"stock"):
+        explicit constructor knobs win, the rest comes from
+        :func:`auto_config`'s measured per-backend policy."""
+        blk, res = auto_config(engine)
+        if self._block is not None:
+            blk = self._block
+        if self.resolver != "auto":
+            res = self.resolver
+        return blk, res
+
     def _raptor_fn(self, jobs: int, trace: bool = False):
+        blk, res = self.engine_config("raptor")
         return _raptor_runner(
             int(jobs), self.W, self.A, self.flight, len(self.wl.tasks),
             tuple(map(tuple, self._seq.tolist())),
             tuple(map(tuple, self._dep.tolist())),
-            self.wl.dist, self.wl.fail_prob, trace)
+            self.wl.dist, self.wl.fail_prob, blk, res, trace)
 
     def _stock_fn(self, jobs: int, trace: bool = False):
+        blk, _ = self.engine_config("stock")
         return _stock_runner(
             int(jobs), self.W, len(self._smeans),
             tuple(map(tuple, self._sdep.tolist())),
             self.wl.dist, self.wl.fail_prob, self._spasses,
-            bool(self._sextras.any()), trace)
+            bool(self._sextras.any()), blk,
+            self.booking_backend, trace)
 
     def _raptor_args(self):
         wl = self.wl

@@ -1,0 +1,120 @@
+"""Queue-booking Pallas kernel vs the sequential best-fit oracle.
+
+Runs in interpret mode so the kernel tier is exercised on CPU-only CI
+(ci.yml runs this file explicitly); the booking discipline itself is the
+one the closed-loop stock engine replays, so parity here is parity with
+the engine's oracle path (``scan_core.bestfit_book_step``).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+except ModuleNotFoundError:  # bare env: property tests skip, rest still run
+    from _hypothesis_compat import hypothesis, st
+
+from repro.kernels.queue_booking.ops import book_stream
+from repro.kernels.queue_booking.ref import book_stream_ref
+
+
+def make(seed, T, N, W, util=0.8, dead_tail=0):
+    rng = np.random.default_rng(seed)
+    ready = np.sort(rng.uniform(0, N * 100 / (W * util), (T, N)),
+                    axis=1).astype(np.float32)
+    if dead_tail:
+        ready[:, N - dead_tail:] = np.inf
+    service = rng.exponential(100.0, (T, N)).astype(np.float32)
+    wf0 = rng.uniform(0, 300.0, (T, W)).astype(np.float32)
+    return jnp.asarray(ready), jnp.asarray(service), jnp.asarray(wf0)
+
+
+CASES = [
+    # (T, N, W, block, dead_tail)
+    (2, 128, 15, 64, 0),
+    (4, 200, 15, 64, 30),     # ragged stream: padded up + dead events
+    (1, 96, 4, 16, 0),        # tiny pool
+    (3, 256, 31, 128, 10),
+]
+
+
+@pytest.mark.parametrize("T,N,W,block,dead", CASES)
+def test_kernel_matches_ref(T, N, W, block, dead):
+    ready, service, wf0 = make(0, T, N, W, dead_tail=dead)
+    fin, start, worker, wf = book_stream(ready, service, wf0, block=block,
+                                         interpret=True)
+    rfin, rstart, rworker, rwf = book_stream_ref(ready, service, wf0)
+    np.testing.assert_array_equal(np.asarray(fin), np.asarray(rfin))
+    np.testing.assert_array_equal(np.asarray(start), np.asarray(rstart))
+    np.testing.assert_array_equal(np.asarray(worker), np.asarray(rworker))
+    np.testing.assert_array_equal(np.asarray(wf), np.asarray(rwf))
+
+
+def test_kernel_block_size_invariance():
+    """The block size only chunks the VMEM-resident resolution; the
+    schedule must be identical for any block."""
+    ready, service, wf0 = make(1, 2, 192, 15)
+    base = book_stream(ready, service, wf0, block=1, interpret=True)
+    for block in (16, 64, 192):
+        out = book_stream(ready, service, wf0, block=block, interpret=True)
+        for a, b in zip(base, out):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_kernel_state_carries_between_blocks():
+    """Bookings in an early block must constrain later blocks: zeroing the
+    first block's service times frees workers earlier and must change
+    later finish times (the W-vector actually crosses the block edge)."""
+    ready, service, wf0 = make(2, 1, 128, 4, util=1.2)
+    fin1, *_ = book_stream(ready, service, wf0, block=32, interpret=True)
+    service2 = service.at[:, :32].set(0.0)
+    fin2, *_ = book_stream(ready, service2, wf0, block=32, interpret=True)
+    assert not np.array_equal(np.asarray(fin1[:, 64:]),
+                              np.asarray(fin2[:, 64:]))
+
+
+def test_dead_events_book_nothing():
+    """ready=inf events (stream padding / unmaterialized fixed-point
+    slots) must leave the pool untouched and report worker -1."""
+    ready, service, wf0 = make(3, 2, 64, 8, dead_tail=20)
+    fin, start, worker, wf = book_stream(ready, service, wf0, block=32,
+                                         interpret=True)
+    live = np.isfinite(np.asarray(ready))
+    assert np.all(np.asarray(worker)[~live] == -1)
+    assert np.all(np.isinf(np.asarray(fin)[~live]))
+    # pool final state equals a replay of only the live prefix
+    n_live = int(live[0].sum())
+    _, _, _, wf_live = book_stream(ready[:, :n_live], service[:, :n_live],
+                                   wf0, block=32, interpret=True)
+    np.testing.assert_array_equal(np.asarray(wf), np.asarray(wf_live))
+
+
+def test_engine_pallas_backend_matches_scan():
+    """The in-engine route: QueueFlightSim(booking_backend="pallas") must
+    replay the stock stream bit-for-bit like the jnp substrate."""
+    from repro.sim.vector_queue import QueueFlightSim, wordcount_queue
+    kw = dict(num_workers=15, num_azs=3, load="high", seed=0, block=64)
+    a = QueueFlightSim(wordcount_queue(), **kw)
+    b = QueueFlightSim(wordcount_queue(), booking_backend="pallas", **kw)
+    np.testing.assert_array_equal(
+        np.asarray(a.run(96, 2, raptor=False).response_ms),
+        np.asarray(b.run(96, 2, raptor=False).response_ms))
+    ta, tb = (s.trace_run(64, 2, raptor=False) for s in (a, b))
+    for k in ("ready", "start", "fin", "worker"):
+        np.testing.assert_array_equal(ta[k], tb[k])
+
+
+@hypothesis.given(seed=st.integers(0, 1000), W=st.sampled_from([2, 7, 15]),
+                  block=st.sampled_from([8, 32, 64]),
+                  util=st.sampled_from([0.4, 0.9, 1.3]))
+@hypothesis.settings(max_examples=10, deadline=None)
+def test_kernel_property(seed, W, block, util):
+    ready, service, wf0 = make(seed, 1, 96, W, util=util)
+    fin, start, worker, wf = book_stream(ready, service, wf0, block=block,
+                                         interpret=True)
+    rfin, rstart, rworker, rwf = book_stream_ref(ready, service, wf0)
+    np.testing.assert_array_equal(np.asarray(fin), np.asarray(rfin))
+    np.testing.assert_array_equal(np.asarray(worker), np.asarray(rworker))
+    np.testing.assert_array_equal(np.asarray(wf), np.asarray(rwf))

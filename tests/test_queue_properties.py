@@ -179,6 +179,87 @@ def test_trace_matches_run():
 
 
 # ------------------------------------------------------------------
+# blocked event-replay substrate: block-size / resolver invariance
+# ------------------------------------------------------------------
+# block=1 is the sequential oracle scan — bit-for-bit the pre-blocking
+# engine, conservative full race budget.  Every blocked configuration
+# (sim/scan_core.py: the unrolled chunks and the bounded parallel fixed
+# point, plus the tight K-completion race budget the blocked raptor
+# replay runs on) must reproduce it BITWISE, so agreement here
+# simultaneously validates the blocking, the fixed point's exactness,
+# and the tight-budget theorem.  Mean/p50/p99 equality follows from the
+# pointwise equality but is asserted explicitly (the acceptance shape).
+
+BLOCKED_CONFIGS = [(1, "auto"), (16, "unrolled"), (16, "fixpoint"),
+                   (64, "fixpoint")]
+
+
+@pytest.mark.parametrize("raptor", [False, True])
+def test_blocked_replay_block_size_invariance(raptor):
+    """wordcount at util 0.75: staged DAG, the hardest blocked case."""
+    base = None
+    for block, resolver in BLOCKED_CONFIGS:
+        sim = QueueFlightSim(wordcount_queue(), num_workers=15, num_azs=3,
+                             load="high", seed=9, block=block,
+                             resolver=resolver)
+        tr = sim.trace_run(192, 3, raptor=raptor)
+        if raptor:
+            assert_raptor_invariants(tr, 15)
+        else:
+            assert_stock_invariants(tr, 15)
+        # the traced replay IS the measured one at every block size
+        res = sim.run(192, 3, raptor=raptor)
+        np.testing.assert_array_equal(tr["response"],
+                                      np.asarray(res.response_ms))
+        if base is None:
+            base = (tr, res.summary())
+        else:
+            for k in tr:
+                np.testing.assert_array_equal(
+                    tr[k], base[0][k],
+                    err_msg=f"block={block}/{resolver}: trace {k} diverged")
+            s = res.summary()
+            for k in ("mean", "median", "p99"):
+                assert s[k] == base[1][k], (block, resolver, k)
+
+
+def test_blocked_replay_direct_start_invariance():
+    """keygen (dep-free, direct-start members) across blocks, run()-level
+    bitwise — covers the fast fig6 path incl. the K-event race budget."""
+    base = None
+    for block, resolver in ((1, "auto"), (8, "unrolled"), (32, "fixpoint")):
+        sim = QueueFlightSim(keygen_queue(), num_workers=15, num_azs=3,
+                             load="medium", seed=4, block=block,
+                             resolver=resolver)
+        r = np.asarray(sim.run(256, 4, raptor=True).response_ms)
+        s = np.asarray(sim.run(256, 4, raptor=False).response_ms)
+        if base is None:
+            base = (r, s)
+        else:
+            np.testing.assert_array_equal(r, base[0])
+            np.testing.assert_array_equal(s, base[1])
+
+
+def test_blocked_replay_with_failures_invariance():
+    """fail_prob > 0 exercises the full F*K race budget and the error
+    broadcast path through the substrate; blocked must still equal the
+    oracle bitwise (responses AND the ok mask)."""
+    import dataclasses
+    wl = dataclasses.replace(wordcount_queue(), fail_prob=0.3)
+    base = None
+    for block, resolver in ((1, "auto"), (16, "fixpoint"), (16, "unrolled")):
+        sim = QueueFlightSim(wl, num_workers=15, num_azs=3, load="medium",
+                             seed=2, block=block, resolver=resolver)
+        res = sim.run(192, 3, raptor=True)
+        r = (np.asarray(res.response_ms), np.asarray(res.ok))
+        if base is None:
+            base = r
+        else:
+            np.testing.assert_array_equal(r[0], base[0])
+            np.testing.assert_array_equal(r[1], base[1])
+
+
+# ------------------------------------------------------------------
 # hypothesis tier (random deployments; skips when hypothesis is absent)
 # ------------------------------------------------------------------
 

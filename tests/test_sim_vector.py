@@ -126,6 +126,32 @@ def test_failure_matches_exact_form():
             A.forkjoin_failure(p, n_tasks), abs=0.02)
 
 
+def test_flight_trial_tight_event_budget_exact():
+    """With fail_prob = 0 every race event completes a DISTINCT task
+    (success broadcasts preempt peers mid-that-task), so K scan trips
+    replay the race exactly like the conservative F*K budget — the
+    hottest-loop reduction the blocked engines run on.  Covers F > K
+    (duplicate first tasks: the slower twin is preempted, no event)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.sim.vector import _flight_trial
+    rng = np.random.default_rng(11)
+    for F, K in ((2, 2), (3, 5), (6, 2), (4, 4)):
+        seq = jnp.array([np.roll(np.arange(K), -(m % K)) for m in range(F)])
+        fail = jnp.zeros((F, K), dtype=bool)
+        full = jax.jit(lambda z, tj, seq=seq: _flight_trial(
+            z, jnp.zeros_like(z, dtype=bool), tj, seq, 0.5))
+        tight = jax.jit(lambda z, tj, seq=seq, K=K: _flight_trial(
+            z, jnp.zeros_like(z, dtype=bool), tj, seq, 0.5, num_events=K))
+        for _ in range(25):
+            z = jnp.array(rng.exponential(700.0, (F, K)).astype(np.float32))
+            tj = jnp.array(rng.exponential(15.0, (F,)).astype(np.float32))
+            t0, ok0 = full(z, tj)
+            t1, ok1 = tight(z, tj)
+            assert bool(ok0) and bool(ok1)
+            assert float(t0) == float(t1), (F, K)
+
+
 def test_scale_effect_monotone():
     """1 AZ: correlated replicas, ~no win.  3+ AZs: the full E[min] win."""
     ratios = {}
