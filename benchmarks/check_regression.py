@@ -22,6 +22,7 @@ TRACKED = [
     (("vector", "trials_per_s"), "open-loop vector trials/s"),
     (("queue", "jobs_per_s"), "closed-loop queue (oracle) jobs/s"),
     (("queue_blocked", "jobs_per_s"), "blocked event-replay queue jobs/s"),
+    (("queue_logdepth", "jobs_per_s"), "log-depth summary-chain queue jobs/s"),
     (("dag_wordcount", "jobs_per_s"), "wordcount DAG jobs/s"),
     (("queue_stock_taskfcfs", "jobs_per_s"), "task-FCFS stock jobs/s"),
     (("fig6_sweep", "vector_jobs_per_s"), "fig6 load-sweep jobs/s"),

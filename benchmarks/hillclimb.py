@@ -1,5 +1,11 @@
 import os
-os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+if "--xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    # append, never overwrite: a user-supplied XLA_FLAGS (tuning flags,
+    # dump dirs) must survive; an explicit device count wins outright
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count"
+                                 "=512").strip()
 
 """Perf-iteration driver (EXPERIMENTS.md §Perf): lower one (arch, shape)
 cell under a named sharding/step variant and report the three roofline

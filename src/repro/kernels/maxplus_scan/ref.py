@@ -1,0 +1,23 @@
+"""Oracle for the max-plus summary-scan kernel.
+
+Delegates to the (separately property-tested) factored-operator algebra in
+:mod:`repro.sim.scan_core` — ``maxplus_prefix_entries`` with the
+``lax.associative_scan`` backend — vmapped over the trial axis, so kernel
+parity here is parity with the exact prefix the log-depth replay consumes.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.sim.scan_core import maxplus_prefix_entries
+
+
+def maxplus_scan_ref(diag, off, wf0):
+    """diag/off: (T, nb, W); wf0: (T, W).
+
+    Returns ``(entries (T, nb, W), wf_out (T, W))``.
+    """
+    def one(d, b, w0):
+        return maxplus_prefix_entries(d, b, w0, backend="xla")
+
+    return jax.vmap(one)(diag, off, wf0)

@@ -1,5 +1,11 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+if "--xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    # append, never overwrite: a user-supplied XLA_FLAGS (tuning flags,
+    # dump dirs) must survive; an explicit device count wins outright
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count"
+                                 "=512").strip()
 
 """Multi-pod dry-run: lower + compile every (architecture x input shape) cell
 on the production meshes, proving the distribution config is coherent.

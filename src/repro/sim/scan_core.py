@@ -33,6 +33,17 @@ The intra-block work is (B x W) dense arithmetic vectorized across the
 O(events/B * passes).  ``block=1`` degenerates to the plain event scan
 (bit-for-bit the pre-blocking engines) and is kept as the oracle path.
 
+Chaining blocks is itself a max-plus linear recurrence: a resolved block
+maps the incoming W-vector by a factored operator (diag, offset) that
+composes associatively (``maxplus_compose``), so ``scan="logdepth"``
+replaces the O(N/B) sequential block scan with ONE
+``lax.associative_scan`` over block summaries per outer pass — O(log N/B)
+sequential depth, with a block-level Jacobi (same lower-triangularity
+argument, now in block index) supplying exact entry vectors in at most
+N/B outer passes.  The summary build + compose also ships as a Pallas
+kernel (:mod:`repro.kernels.maxplus_scan`) that keeps the whole operator
+tape VMEM-resident on accelerators.
+
 The fused best-fit/earliest-free booking step additionally ships as a
 Pallas kernel (:mod:`repro.kernels.queue_booking`) so accelerator runs
 resolve whole blocks in VMEM instead of round-tripping HBM per event;
@@ -73,8 +84,147 @@ def exclusive_running_max(contrib, wf_in):
     return jnp.maximum(wf_in[None, :], prev)
 
 
+# --------------------------------------------------------------------------
+# factored W x W max-plus block operators (the log-depth summaries)
+# --------------------------------------------------------------------------
+# A resolved block acts on the carried free-at vector as a max-plus linear
+# map.  In full generality that map is a W x W matrix, but every map the
+# replay produces factors as (diag, offset): apply((d, b), wf) =
+# max(wf + d, b) elementwise — the diagonal shifts what the block leaves of
+# the incoming vector, the offset is the block's own bookings.  Factored
+# operators compose closed-form in O(W) (compose below) and the composition
+# is associative, so a whole stream's prefix maps come out of ONE
+# `lax.associative_scan` at O(log nb) sequential depth.
+#
+# Bitwise note: the engines only ever emit diag = 0 operators (a booking
+# REPLACES a worker's free-at time; it never shifts it), and with d == 0
+# the compose degenerates to an elementwise float max — exactly
+# associative in floats, which is what lets scan="logdepth" stay bitwise
+# against the sequential oracle.  The general d != 0 form is kept (and
+# property-tested) because it is the algebra the Pallas kernel implements.
+
+def maxplus_identity(num_workers: int, dtype=jnp.float32):
+    """The do-nothing block operator: d = 0, b = -inf."""
+    return (jnp.zeros((num_workers,), dtype),
+            jnp.full((num_workers,), -jnp.inf, dtype))
+
+
+def maxplus_compose(first, then):
+    """Operator for "apply ``first``, then ``then``" (elementwise, O(W)).
+
+    ``apply(compose(first, then), wf) == apply(then, apply(first, wf))``:
+    max(max(wf + d1, b1) + d2, b2) = max(wf + (d1 + d2), max(b1 + d2, b2)).
+    """
+    d1, b1 = first
+    d2, b2 = then
+    return d1 + d2, jnp.maximum(b1 + d2, b2)
+
+
+def maxplus_apply(op, wf):
+    """Push a free-at vector through a factored block operator."""
+    d, b = op
+    return jnp.maximum(wf + d, b)
+
+
+def block_summary(num_workers: int, widx, rel):
+    """Offset part of a resolved block's operator: the per-worker max of
+    its booking contributions, shape (..., W) from (..., B, M) estimates.
+    The engines' diagonal part is identically 0 (see module note)."""
+    return jnp.max(booking_contrib(num_workers, widx, rel), axis=-2)
+
+
+def maxplus_prefix_entries(diag, off, wf0, *, backend: str = "xla",
+                           interpret=None):
+    """Entry vectors of every block from one associative prefix scan.
+
+    ``diag``/``off``: (nb, W) factored per-block operators, ``wf0``: (W,)
+    the stream's entry vector.  Returns ``(entries, wf_out)``: row ``k``
+    of ``entries`` (nb, W) is the vector block ``k`` begins with —
+    ``apply(op_0 ∘ … ∘ op_{k-1}, wf0)``, row 0 is ``wf0`` itself — and
+    ``wf_out`` is the whole stream's exit vector.  ``backend="pallas"``
+    routes through :mod:`repro.kernels.maxplus_scan` (the VMEM-resident
+    doubling scan); ``"xla"`` is ``jax.lax.associative_scan``.
+    """
+    if backend == "pallas":
+        from repro.kernels.maxplus_scan.ops import maxplus_entries
+        ent, wf_out = maxplus_entries(diag[None], off[None], wf0[None],
+                                      interpret=interpret)
+        return ent[0], wf_out[0]
+    if backend != "xla":
+        raise ValueError(f"unknown summary backend {backend!r}")
+    pd, pb = lax.associative_scan(maxplus_compose, (diag, off), axis=0)
+    entries = jnp.concatenate(
+        [wf0[None], maxplus_apply((pd[:-1], pb[:-1]), wf0[None])], axis=0)
+    return entries, maxplus_apply((pd[-1], pb[-1]), wf0)
+
+
+# --------------------------------------------------------------------------
+# intra-block resolvers (exact, shape-generic over the block length)
+# --------------------------------------------------------------------------
+
+def _fixpoint_resolver(body, W):
+    """Bounded parallel Jacobi over one block: re-book every event against
+    the per-event W-vectors reconstructed from the previous pass, until the
+    OBSERVED vectors converge (bitwise).  Convergence of the observed rows
+    — not merely of the booking estimates — is the right exit test: a dead
+    event's irrelevant worker pick may flap between passes without ever
+    changing what any event observes, and conversely equal bookings under
+    unequal observations would exit with stale outputs.  The returned
+    ``(est, out)`` are always evaluated at the converged rows."""
+    vbody = jax.vmap(body)
+
+    def resolve(wf, ev):
+        nev = jax.tree_util.tree_leaves(ev)[0].shape[0]
+
+        def rows_of(est):
+            return exclusive_running_max(booking_contrib(W, *est), wf)
+
+        # pass 1 observes the carried vector alone (the empty-prefix rows)
+        rows0 = jnp.broadcast_to(wf, (nev, W))
+        est1, out1 = vbody(rows0, ev)
+
+        def cond(c):
+            p, rows, used = c[0], c[1], c[2]
+            return jnp.any(rows != used) & (p < nev)
+
+        def again(c):
+            p, rows = c[0], c[1]
+            est2, out2 = vbody(rows, ev)
+            return p + 1, rows_of(est2), rows, est2, out2
+
+        _, _, _, est, out = lax.while_loop(
+            cond, again, (jnp.asarray(1), rows_of(est1), rows0, est1, out1))
+        return est, out
+
+    return resolve
+
+
+def _unrolled_resolver(body, unroll=None):
+    """Resolve one block as a fused straight-line sequential region; also
+    returns the booking estimates so the caller can summarize the block."""
+    def resolve(wf, ev):
+        nev = jax.tree_util.tree_leaves(ev)[0].shape[0]
+
+        def step(w, e):
+            (widx, rel), out = body(w, e)
+            return apply_bookings(w, widx, rel), ((widx, rel), out)
+
+        _, (est, out) = lax.scan(
+            step, wf, ev, unroll=nev if unroll is None else min(unroll, nev))
+        return est, out
+
+    return resolve
+
+
+def _tree_concat(a, b):
+    return jax.tree_util.tree_map(
+        lambda x, y: jnp.concatenate([x, y], axis=0), a, b)
+
+
 def blocked_event_replay(body, wf0, events, *, block: int,
-                         resolver: str = "fixpoint", unroll: int = 1):
+                         resolver: str = "fixpoint", unroll: int = 1,
+                         scan: str = "seq", summary_backend: str = "xla",
+                         interpret=None):
     """Replay a sorted event stream in blocks, carrying only the W-vector.
 
     ``body(wf, event) -> ((widx, rel), out)`` books one event against the
@@ -82,85 +232,152 @@ def blocked_event_replay(body, wf0, events, *, block: int,
     booked workers (< 0 books nothing — the dead/padded convention),
     ``rel`` (M,) their release times (must be ``-inf`` wherever the event
     must not touch the pool), ``out`` an arbitrary output pytree.  Events
-    is a pytree with leading axis N (the per-trial stream, already sorted
-    and — for the fixpoint resolver — padded to a multiple of ``block``).
+    is a pytree with leading axis N (the per-trial stream, already
+    sorted).  ``block`` need not divide N: the ragged tail is resolved as
+    one final partial block — no phantom events are ever synthesized.
+    ``block=0`` picks the adaptive log-depth split (``ceil(n/3)``).
 
-    ``block <= 1`` runs the plain sequential scan (bit-identical to the
+    ``block=1`` runs the plain sequential scan (bit-identical to the
     pre-blocking engines; ``unroll`` trims its per-step dispatch cost) —
     the oracle path.  For ``block > 1`` the intra-block resolver is:
 
     * ``"fixpoint"`` — the bounded parallel Jacobi described in the
       module docstring: exact in at most ``block`` passes, early-exit on
-      convergence, all comparisons bitwise so the fixed point IS the
-      sequential schedule.  Pass count tracks the longest intra-block
-      dependency chain, so this is the depth-reduction mode: O(N/B·p)
-      runtime steps, each (trials x B)-wide.  When bookings are
-      placement-coupled (the raptor HA discipline: which worker is free
-      decides the AZ-shared draws) chains approach the block length and
-      the mode loses its edge — measured in EXPERIMENTS.md.
+      convergence of the observed per-event W-vectors, all comparisons
+      bitwise so the fixed point IS the sequential schedule.  Pass count
+      tracks the longest intra-block dependency chain, so this is the
+      depth-reduction mode: O(N/B·p) runtime steps, each (trials x
+      B)-wide.  When bookings are placement-coupled (the raptor HA
+      discipline: which worker is free decides the AZ-shared draws)
+      chains approach the block length and the mode loses its edge —
+      measured in EXPERIMENTS.md.
     * ``"unrolled"`` — resolve the block as one fused straight-line
-      region (scan unrolling): the runtime loop still has depth N/B with
-      only the W-vector carried between iterations, but events inside a
-      block resolve sequentially in-register instead of iteratively in
-      parallel.  The throughput mode for placement-coupled streams.
+      region (scan unrolling): events inside a block resolve sequentially
+      in-register instead of iteratively in parallel.
 
-    Both resolvers are bitwise-identical to the ``block=1`` oracle scan
-    (tests/test_queue_properties.py).  Returns ``(wf_final, outs)`` with
-    each out leaf stacked along the (padded) event axis.
+    ``scan`` picks how resolved blocks chain across the stream:
+
+    * ``"seq"`` — a ``lax.scan`` over blocks carries the W-vector:
+      O(N/B) sequential depth.
+    * ``"logdepth"`` — every block is summarized as a factored W x W
+      max-plus operator (offset = the block's booking contributions) and
+      ALL block entry vectors come out of one ``lax.associative_scan``
+      over the summaries — O(log(N/B)) sequential depth per pass.  Entry
+      vectors feed back into a block-level Jacobi iteration (every block
+      re-resolves against its latest entry estimate, vmapped across
+      blocks) whose fixed point is unique by the same strict
+      lower-triangularity argument, now in block index: after pass ``p``
+      blocks ``0..p`` are exact, so ``nb`` passes always suffice and the
+      loop exits as soon as the entries stop changing.  The intra-block
+      resolvers are reused unchanged; ``summary_backend`` routes the
+      summary prefix scan ("xla" or the "pallas" VMEM kernel).
+
+    Every (resolver, scan) configuration is bitwise-identical to the
+    ``block=1`` oracle scan (tests/test_queue_properties.py).  Returns
+    ``(wf_final, outs)`` with each out leaf stacked along the event axis.
     """
     W = int(wf0.shape[-1])
     n = int(jax.tree_util.tree_leaves(events)[0].shape[0])
     block = int(block)
+    if not block:
+        # adaptive split (the auto_config log-depth host default): two
+        # Jacobi blocks + an equal ragged tail — ceil(n/3).  More blocks
+        # multiply total work by the outer pass count (which is exactly
+        # nb under bitwise choice coupling), fewer waste the tail's
+        # single resolve; see EXPERIMENTS.md §log-depth.
+        block = max(1, -(-n // 3))
+    if scan not in ("seq", "logdepth"):
+        raise ValueError(f"unknown block scan mode {scan!r}")
 
-    if block <= 1 or resolver == "unrolled":
+    if block <= 1 or (resolver == "unrolled" and scan == "seq"):
         def step(wf, ev):
             (widx, rel), out = body(wf, ev)
             return apply_bookings(wf, widx, rel), out
         return lax.scan(step, wf0, events,
                         unroll=unroll if block <= 1 else block)
 
-    if resolver != "fixpoint":
+    if resolver == "fixpoint":
+        resolve = _fixpoint_resolver(body, W)
+    elif resolver == "unrolled":
+        # small blocks fuse into one straight-line region; big blocks cap
+        # the codegen (compile cost grows with the unroll factor) and loop
+        # a partially-unrolled scan instead — same schedule bitwise
+        resolve = _unrolled_resolver(
+            body, None if block <= 32 else max(unroll, 8))
+    else:
         raise ValueError(f"unknown block resolver {resolver!r}")
-    if n % block:
-        raise ValueError(
-            f"event stream length {n} is not a multiple of block={block}; "
-            f"pad the stream (dead events: ready=inf / widx=-1)")
-    nb = n // block
-    ev_blocks = jax.tree_util.tree_map(
-        lambda a: a.reshape((nb, block) + a.shape[1:]), events)
-    vbody = jax.vmap(body)
 
-    def resolve_block(wf, ev):
-        def one_pass(est):
-            rows = exclusive_running_max(booking_contrib(W, *est), wf)
-            return vbody(rows, ev)
+    nb, rem = divmod(n, block)
+    split = n - rem
+    main = jax.tree_util.tree_map(
+        lambda a: a[:split].reshape((nb, block) + a.shape[1:]), events)
+    tail = (jax.tree_util.tree_map(lambda a: a[split:], events)
+            if rem else None)
 
-        # pass 1 observes the carried vector alone (an empty-prefix
-        # estimate), which doubles as the shape probe for the estimates
-        est1, out1 = vbody(jnp.broadcast_to(wf, (block, W)), ev)
-        est0 = (jnp.full_like(est1[0], -1),
-                jnp.full_like(est1[1], -jnp.inf))
+    def resolve_step(wf, ev):
+        est, out = resolve(wf, ev)
+        return jnp.maximum(wf, jnp.max(booking_contrib(W, *est), axis=0)), out
 
-        def cond(c):
-            p, est, prev, _ = c
-            changed = (jnp.any(est[0] != prev[0])
-                       | jnp.any(est[1] != prev[1]))
-            return changed & (p < block)
+    if scan == "seq":
+        if nb:
+            wf_r, outs = lax.scan(resolve_step, wf0, main)
+            outs = jax.tree_util.tree_map(
+                lambda a: a.reshape((split,) + a.shape[2:]), outs)
+        else:
+            wf_r, outs = wf0, None
+    else:
+        if nb:
+            wf_r, outs = _logdepth_replay(resolve, wf0, main, nb, W,
+                                          summary_backend, interpret)
+            outs = jax.tree_util.tree_map(
+                lambda a: a.reshape((split,) + a.shape[2:]), outs)
+        else:
+            wf_r, outs = wf0, None
+    if rem:
+        wf_r, out_t = resolve_step(wf_r, tail)
+        outs = out_t if outs is None else _tree_concat(outs, out_t)
+    return wf_r, outs
 
-        def again(c):
-            p, est, _, _ = c
-            est2, out2 = one_pass(est)
-            return p + 1, est2, est, out2
 
-        _, est, _, out = lax.while_loop(
-            cond, again, (jnp.asarray(1), est1, est0, out1))
-        wf2 = jnp.maximum(wf, jnp.max(booking_contrib(W, *est), axis=0))
-        return wf2, out
+def _logdepth_replay(resolve, wf0, ev_blocks, nb, W, summary_backend,
+                     interpret):
+    """Block-level Jacobi over entry vectors with the associative max-plus
+    prefix supplying every block's entry at O(log nb) depth per pass.
 
-    wf_final, outs = lax.scan(resolve_block, wf0, ev_blocks)
-    outs = jax.tree_util.tree_map(
-        lambda a: a.reshape((n,) + a.shape[2:]), outs)
-    return wf_final, outs
+    Invariant at exit: the returned ``(est, out)`` were produced by a
+    resolve pass whose entry estimates equal the entries those estimates
+    regenerate — the unique fixed point, i.e. the sequential schedule.
+    Summaries are offset-only (diag = 0): a block's effect on the carried
+    vector is a pure elementwise max with its booking contributions, so
+    the prefix scan composes float maxes only — exactly associative,
+    keeping the whole mode bitwise against the sequential oracle.
+    """
+    vres = jax.vmap(resolve)
+    zeros = jnp.zeros((nb, W), wf0.dtype)
+
+    def prefix(est):
+        off = block_summary(W, *est)            # (nb, W)
+        return maxplus_prefix_entries(zeros, off, wf0,
+                                      backend=summary_backend,
+                                      interpret=interpret)
+
+    entries0 = jnp.broadcast_to(wf0, (nb, W))
+    est0, out0 = vres(entries0, ev_blocks)
+    entries1, wf1 = prefix(est0)
+
+    def cond(c):
+        p, entries, used = c[0], c[1], c[2]
+        return jnp.any(entries != used) & (p < nb)
+
+    def again(c):
+        p, entries = c[0], c[1]
+        est, out = vres(entries, ev_blocks)
+        entries2, wf2 = prefix(est)
+        return p + 1, entries2, entries, est, out, wf2
+
+    _, _, _, est, out, wf_out = lax.while_loop(
+        cond, again, (jnp.asarray(1), entries1, entries0, est0, out0, wf1))
+    return wf_out, out
 
 
 # --------------------------------------------------------------------------
@@ -190,17 +407,20 @@ def bestfit_book_step(wf, ready, service):
 
 def blocked_bestfit_booking(wf0, ready, service, *, block: int,
                             full: bool = True, unroll: int = 16,
-                            backend: str = "scan", interpret=None):
+                            backend: str = "scan", interpret=None,
+                            resolver: str = "fixpoint", scan: str = "seq",
+                            summary_backend: str = "xla"):
     """Resolve one trial's whole ready-sorted stream of best-fit bookings.
 
-    ``ready``/``service`` are (N,) with N a multiple of ``block`` (pad with
-    ready=inf, service=0); ``wf0`` the (W,) entry free-at vector.  Returns
+    ``ready``/``service`` are (N,) (any N — a ragged tail resolves as one
+    final partial block); ``wf0`` the (W,) entry free-at vector.  Returns
     ``(fin, start, worker)`` when ``full`` else ``(fin,)`` — the non-full
     form lets the stock fixed point over stage depth skip two (N,)-sized
     outputs per estimation pass.
 
-    ``backend="scan"`` runs :func:`blocked_event_replay`; ``"pallas"``
-    dispatches the fused intra-block kernel
+    ``backend="scan"`` runs :func:`blocked_event_replay` (with its
+    ``resolver``/``scan``/``summary_backend`` knobs passed through);
+    ``"pallas"`` dispatches the fused intra-block kernel
     (:mod:`repro.kernels.queue_booking`), which keeps the whole block
     resolution in VMEM on accelerators (``interpret`` defaults per
     :func:`repro.kernels._compat.interpret_default`, so the same code path
@@ -223,7 +443,10 @@ def blocked_bestfit_booking(wf0, ready, service, *, block: int,
         return (w[None], fin[None]), out
 
     _, outs = blocked_event_replay(body, wf0, (ready, service),
-                                   block=block, unroll=unroll)
+                                   block=block, unroll=unroll,
+                                   resolver=resolver, scan=scan,
+                                   summary_backend=summary_backend,
+                                   interpret=interpret)
     return outs
 
 
@@ -257,62 +480,86 @@ def blocked_sorted_booking(wf0, ready, service, *, block: int):
     W = int(wf0.shape[-1])
     n = int(ready.shape[0])
     block = int(block)
-    if n % block:
-        raise ValueError(f"stream length {n} not a multiple of {block}")
-    nb = n // block
-    idx = jnp.arange(block)
-    avail = jnp.concatenate([jnp.zeros(W, jnp.int32),
-                             1 + idx.astype(jnp.int32)])
 
-    def resolve(pool, ev):
-        r, s = ev
-        live = ~jnp.isinf(r)
-        c = jnp.cumsum(live)            # live bookings through event i
+    def resolver_at(blk):
+        idx = jnp.arange(blk)
+        avail = jnp.concatenate([jnp.zeros(W, jnp.int32),
+                                 1 + idx.astype(jnp.int32)])
 
-        def one_pass(fin):
-            vals = jnp.concatenate([pool, fin])
-            order = jnp.argsort(vals)
-            v_s, a_s = vals[order], avail[order]
-            # element q is in event i's pool iff its availability rank
-            # a_s[q] <= i (0 = entry pool, j+1 = fin_j); the c_i-th
-            # included element of the sorted tape IS the order statistic
-            incl = a_s[None, :] <= idx[:, None]
-            cnt = jnp.cumsum(incl, axis=1)
-            hit = incl & (cnt == c[:, None])
-            sig = jnp.sum(jnp.where(hit, v_s, 0.0), axis=1)
-            st = jnp.maximum(r, sig)
-            return jnp.where(live, st + s, jnp.inf)
+        def resolve(pool, ev):
+            r, s = ev
+            live = ~jnp.isinf(r)
+            c = jnp.cumsum(live)        # live bookings through event i
 
-        fin0 = jnp.where(live, r + s, jnp.inf)      # zero-queueing bound
-        fin1 = one_pass(fin0)
+            def one_pass(fin):
+                vals = jnp.concatenate([pool, fin])
+                order = jnp.argsort(vals)
+                v_s, a_s = vals[order], avail[order]
+                # element q is in event i's pool iff its availability rank
+                # a_s[q] <= i (0 = entry pool, j+1 = fin_j); the c_i-th
+                # included element of the sorted tape IS the order statistic
+                incl = a_s[None, :] <= idx[:, None]
+                cnt = jnp.cumsum(incl, axis=1)
+                hit = incl & (cnt == c[:, None])
+                sig = jnp.sum(jnp.where(hit, v_s, 0.0), axis=1)
+                st = jnp.maximum(r, sig)
+                return jnp.where(live, st + s, jnp.inf)
 
-        def cond(carry):
-            p, fin, prev = carry
-            return jnp.any(fin != prev) & (p < block)
+            fin0 = jnp.where(live, r + s, jnp.inf)  # zero-queueing bound
+            fin1 = one_pass(fin0)
 
-        def again(carry):
-            p, fin, _ = carry
-            return p + 1, one_pass(fin), fin
+            def cond(carry):
+                p, fin, prev = carry
+                return jnp.any(fin != prev) & (p < blk)
 
-        _, fin, _ = lax.while_loop(cond, again, (jnp.asarray(1), fin1, fin0))
-        # block exit: the c_B consumed values are exactly the c_B smallest
-        # of the pool ∪ fins (consume-min equivalence); keep the rest
-        tape = jnp.sort(jnp.concatenate([pool, fin]))
-        return lax.dynamic_slice(tape, (c[-1],), (W,)), fin
+            def again(carry):
+                p, fin, _ = carry
+                return p + 1, one_pass(fin), fin
 
-    _, fin = lax.scan(resolve, jnp.sort(wf0), jax.tree_util.tree_map(
-        lambda a: a.reshape(nb, block), (ready, service)))
-    return (fin.reshape(n),)
+            _, fin, _ = lax.while_loop(cond, again,
+                                       (jnp.asarray(1), fin1, fin0))
+            # block exit: the c_B consumed values are exactly the c_B
+            # smallest of the pool ∪ fins (consume-min equivalence);
+            # keep the rest
+            tape = jnp.sort(jnp.concatenate([pool, fin]))
+            return lax.dynamic_slice(tape, (c[-1],), (W,)), fin
+
+        return resolve
+
+    # ragged tail: the remainder resolves as one final partial block
+    # against the carried pool — never via phantom events
+    nb, rem = divmod(n, block)
+    split = n - rem
+    pool = jnp.sort(wf0)
+    if nb:
+        pool, fin = lax.scan(
+            resolver_at(block), pool,
+            jax.tree_util.tree_map(lambda a: a[:split].reshape(nb, block),
+                                   (ready, service)))
+        fin = fin.reshape(split)
+    else:
+        fin = jnp.zeros((0,), ready.dtype)
+    if rem:
+        _, fin_t = resolver_at(rem)(pool, (ready[split:], service[split:]))
+        fin = jnp.concatenate([fin, fin_t])
+    return (fin,)
 
 
 def stock_booking_fins(wf0, ready, service, *, block: int,
-                       backend: str = "scan", interpret=None):
+                       backend: str = "scan", interpret=None,
+                       scan: str = "seq", summary_backend: str = "xla"):
     """Finish times only — the form the stock stage-depth fixed point
     consumes on every estimation pass.  Dispatch: ``block <= 1`` runs the
-    sequential oracle scan, larger blocks the order-statistic resolver,
+    sequential oracle scan, larger blocks the order-statistic resolver
+    (``scan="seq"``) or the log-depth generic replay (``scan="logdepth"``),
     ``backend="pallas"`` the fused VMEM kernel."""
     if backend == "pallas" or block <= 1:
         return blocked_bestfit_booking(
             wf0, ready, service, block=max(block, 1), full=False,
             backend=backend, interpret=interpret)
+    if scan == "logdepth":
+        return blocked_bestfit_booking(
+            wf0, ready, service, block=block, full=False, backend=backend,
+            resolver="unrolled", scan="logdepth",
+            summary_backend=summary_backend, interpret=interpret)
     return blocked_sorted_booking(wf0, ready, service, block=block)

@@ -60,14 +60,25 @@ def force_host_devices(n: int) -> int:
     path, so sharded sweeps run (and are CI-tested) on a GitHub runner.
 
     Must run before the jax backend initializes (i.e. before the first
-    ``jax.devices()`` / jit dispatch); afterwards it is a no-op.  Returns
-    the live device count either way, so callers size their shard axis on
-    the actual value, never the requested one.
+    ``jax.devices()`` / jit dispatch).  The flag is APPENDED to any
+    user-supplied ``XLA_FLAGS`` (never overwrites it), and a user-set
+    device-count flag is respected as-is.  If the backend is already live
+    and sees fewer than ``n`` devices, the request cannot take effect —
+    that raises a clear ``RuntimeError`` instead of silently running the
+    sweep unsharded.  Returns the live device count, so callers size
+    their shard axis on the actual value, never the requested one.
     """
     flag = "--xla_force_host_platform_device_count"
-    if flag not in os.environ.get("XLA_FLAGS", "") and not _backend_live():
+    user_set = flag in os.environ.get("XLA_FLAGS", "")
+    if not user_set and not _backend_live():
         os.environ["XLA_FLAGS"] = (
             os.environ.get("XLA_FLAGS", "") + f" {flag}={int(n)}").strip()
+    elif not user_set and jax.device_count() < int(n):
+        raise RuntimeError(
+            f"force_host_devices({n}) called after the jax backend "
+            f"initialized with {jax.device_count()} device(s); call it "
+            f"before the first jax.devices()/jit dispatch, or set "
+            f"XLA_FLAGS={flag}={int(n)} in the environment")
     return jax.device_count()
 
 
@@ -288,11 +299,11 @@ def open_loop_pair_plan(wl: VectorWorkload, configs, *, trials: int = 20_000,
 
 @functools.lru_cache(maxsize=None)
 def _queue_raptor_core(jobs, W, A, F, K, seq_t, dep_t, dist, fail_prob,
-                       block, resolver):
+                       block, resolver, scan, summary_backend):
     from repro.core.analytics import summarize_masked_batch
     from repro.sim.vector_queue import _raptor_trial_fn
     trial = _raptor_trial_fn(jobs, W, A, F, K, seq_t, dep_t, dist, fail_prob,
-                             block, resolver)
+                             block, resolver, scan, summary_backend)
 
     def core(keys, cfg, shared):
         rate, oh_mu, oh_sigma = cfg
@@ -306,11 +317,12 @@ def _queue_raptor_core(jobs, W, A, F, K, seq_t, dep_t, dist, fail_prob,
 
 @functools.lru_cache(maxsize=None)
 def _queue_stock_core(jobs, W, K, dep_t, dist, fail_prob, passes,
-                      has_extras, block, backend):
+                      has_extras, block, backend, scan, summary_backend):
     from repro.core.analytics import summarize_masked_batch
     from repro.sim.vector_queue import _stock_trial_fn
     trial = _stock_trial_fn(jobs, W, K, dep_t, dist, fail_prob, passes,
-                            has_extras, block, backend)
+                            has_extras, block, backend, scan,
+                            summary_backend)
 
     def core(keys, cfg, shared):
         rate, oh_mu, oh_sigma = cfg
@@ -335,15 +347,16 @@ def queue_pair_plan(sims, jobs: int, trials: int) -> SweepPlan:
     counts — sims sharing a plan must agree on it, or they could not share
     the bucket's compiled core."""
     s0 = sims[0]
-    r_blk, r_res = s0.engine_config("raptor")
-    s_blk, _ = s0.engine_config("stock")
+    r_blk, r_res, r_scan = s0.engine_config("raptor")
+    s_blk, _, s_scan = s0.engine_config("stock")
     for s in sims[1:]:
-        if (s.engine_config("raptor") != (r_blk, r_res)
-                or s.engine_config("stock")[0] != s_blk
-                or s.booking_backend != s0.booking_backend):
+        if (s.engine_config("raptor") != (r_blk, r_res, r_scan)
+                or s.engine_config("stock")[::2] != (s_blk, s_scan)
+                or s.booking_backend != s0.booking_backend
+                or s.summary_backend != s0.summary_backend):
             raise ValueError("sims in one queue plan must share the "
-                             "substrate (block, resolver, backend) config "
-                             "— it is part of the bucket key")
+                             "substrate (block, resolver, scan, backend) "
+                             "config — it is part of the bucket key")
     rates = jnp.array([s.rate_hz for s in sims])
     mus = jnp.array([s.oh_mu for s in sims])
     sigmas = jnp.array([s.oh_sigma for s in sims])
@@ -356,7 +369,8 @@ def queue_pair_plan(sims, jobs: int, trials: int) -> SweepPlan:
                 int(jobs), s0.W, s0.A, s0.flight, len(wl.tasks),
                 tuple(map(tuple, s0._seq.tolist())),
                 tuple(map(tuple, s0._dep.tolist())),
-                wl.dist, wl.fail_prob, r_blk, r_res),
+                wl.dist, wl.fail_prob, r_blk, r_res, r_scan,
+                s0.summary_backend),
             s0._keys(trials, True),
             (rates, mus, sigmas),
             (s0.rho, jnp.asarray(wl.task_means, dtype=jnp.float32),
@@ -367,7 +381,8 @@ def queue_pair_plan(sims, jobs: int, trials: int) -> SweepPlan:
                 int(jobs), s0.W, len(s0._smeans),
                 tuple(map(tuple, s0._sdep.tolist())),
                 wl.dist, wl.fail_prob, s0._spasses,
-                bool(s0._sextras.any()), s_blk, s0.booking_backend),
+                bool(s0._sextras.any()), s_blk, s0.booking_backend,
+                s_scan, s0.summary_backend),
             s0._keys(trials, False),
             (rates, mus, sigmas),
             (s0.rho, jnp.asarray(s0._smeans), jnp.asarray(s0._sextras),

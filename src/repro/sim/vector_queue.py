@@ -370,33 +370,50 @@ def _race_f2k2(z_seq, t_join):
 # closed-loop trial bodies (one whole arrival stream per trial)
 # --------------------------------------------------------------------------
 
-def auto_config(engine: str) -> Tuple[int, str]:
-    """Default (block, resolver) per engine and backend.
+def auto_config(engine: str, scan: str = "auto") -> Tuple[int, str, str]:
+    """Default (block, resolver, scan) per engine and backend.
 
     Measured on the recording box (EXPERIMENTS.md throughput-vs-B table):
 
+    * the chain mode defaults to "seq" on every backend: the log-depth
+      associative-summary chain re-resolves every block each outer pass,
+      and under bitwise choice coupling the block-level Jacobi gains
+      exactly ONE exact block per pass in every load regime
+      (EXPERIMENTS.md §log-depth), so the mode is work-bound at >= 2x
+      the sequential chain's bookings — an explicit opt-in
+      (``scan="logdepth"``), not an auto pick;
     * raptor — bookings are placement-coupled (the chosen worker's AZ
       selects the shared service draws), so fixpoint passes track whole
-      intra-block queueing cascades; the unrolled resolver (fused blocks
-      of 8, tight race budget) is the throughput configuration on hosts,
-      while accelerator runs prefer the depth-reduced fixpoint;
-    * stock — worker identity is interchangeable under ready-sorted FCFS,
-      so the order-statistic fixpoint converges in a few passes; still,
-      on CPU the fused sequential chunks already amortize the dispatch
-      cost the fixpoint exists to hide, so the oracle path stays default
-      there and the fixpoint is the accelerator configuration.
+      intra-block queueing cascades; hosts run fused unrolled blocks of
+      8, accelerators the depth-reduced fixpoint;
+    * stock — worker identity is interchangeable under ready-sorted
+      FCFS, so the order-statistic fixpoint converges in a few passes;
+      still, on CPU the sequential oracle already amortizes the dispatch
+      cost the fixpoint exists to hide, so it stays default there.
+
+    ``scan`` other than "auto" forces that chain mode and re-resolves
+    the (block, resolver) defaults for it; the host log-depth block of
+    0 is the adaptive split — ``ceil(n/3)`` at replay build time, two
+    Jacobi blocks plus an equal ragged tail, the measured host optimum
+    (larger ``nb`` multiplies work by the pass count, smaller wastes
+    the tail's single resolve).
     """
     accel = jax.default_backend() not in ("cpu",)
+    if scan == "auto":
+        scan = "seq"
+    if scan == "logdepth":
+        return (64, "fixpoint", scan) if accel else (0, "unrolled", scan)
     if engine == "stock":
-        return (64, "fixpoint") if accel else (1, "fixpoint")
-    return (64, "fixpoint") if accel else (8, "unrolled")
+        return (64, "fixpoint", scan) if accel else (1, "fixpoint", scan)
+    return (64, "fixpoint", scan) if accel else (8, "unrolled", scan)
 
 
 @functools.lru_cache(maxsize=None)
 def _raptor_trial_fn(jobs: int, W: int, A: int, F: int, K: int,
                      seq_t: tuple, dep_t: tuple, dist: str,
                      fail_prob: float, block: int = 1,
-                     resolver: str = "fixpoint", trace: bool = False):
+                     resolver: str = "fixpoint", scan: str = "seq",
+                     summary_backend: str = "xla", trace: bool = False):
     """Per-trial closed-loop raptor replay, closed over the static manifest.
 
     Traced args: arrival rate, rho, per-task means, offset, cv, stage
@@ -409,14 +426,18 @@ def _raptor_trial_fn(jobs: int, W: int, A: int, F: int, K: int,
     per pass — exact because a job observes earlier jobs only through the
     max-plus worker free-at vector — while the unrolled resolver fuses
     each block into one straight-line region; blocked configs also run
-    the races on the tight K-completion event budget.  ``block=1`` is the
-    sequential oracle scan with the conservative full budget, bit-for-bit
-    the pre-blocking engine.
+    the races on the tight K-completion event budget.  ``scan``/
+    ``summary_backend`` pick how resolved blocks chain ("seq" or the
+    associative-summary "logdepth" mode).  ``block=1`` is the sequential
+    oracle scan with the conservative full budget, bit-for-bit the
+    pre-blocking engine.
 
     ``trace=True`` additionally returns ``(arrival, dispatch, worker,
     release)`` per (job, member) — the placement/booking trace the
     property-test harness checks worker-occupancy invariants on.
     """
+    if not block:
+        block = max(1, -(-jobs // 3))   # adaptive log-depth split
     seq = jnp.array(seq_t)
     dep_mask = jnp.array(dep_t)
     w_az = jnp.arange(W) % A
@@ -544,23 +565,14 @@ def _raptor_trial_fn(jobs: int, W: int, A: int, F: int, K: int,
 
         if fail_seq is None:
             events = (arrivals, z_case, t_oh, prio)
-            fills = (jnp.inf, 0.0, 0.0, 0.0)
         else:
             events = (arrivals, z_case, fail_seq, t_oh, prio)
-            fills = (jnp.inf, 0.0, False, 0.0, 0.0)
-        npad = (-(-jobs // block) * block
-                if resolver == "fixpoint" and block > 1 else jobs)
-        if npad > jobs:
-            # pad the stream up to whole blocks with dead (arrival = inf)
-            # jobs; their bookings are gated out and their outputs sliced
-            events = tuple(
-                jnp.concatenate([a, jnp.full((npad - jobs,) + a.shape[1:],
-                                             fill, a.dtype)])
-                for a, fill in zip(events, fills))
+        # no padding: the substrate resolves a ragged tail as one final
+        # partial block, so phantom jobs never enter the stream
         _, outs = blocked_event_replay(job_body, jnp.zeros(W), events,
-                                       block=block, resolver=resolver)
-        if npad > jobs:
-            outs = jax.tree_util.tree_map(lambda a: a[:jobs], outs)
+                                       block=block, resolver=resolver,
+                                       scan=scan,
+                                       summary_backend=summary_backend)
         if trace:
             resp, ok, t_disp, widx, t_rel = outs
             return resp, ok, (arrivals, t_disp, widx, t_rel)
@@ -574,7 +586,8 @@ def _raptor_trial_fn(jobs: int, W: int, A: int, F: int, K: int,
 def _stock_trial_fn(jobs: int, W: int, K: int, dep_t: tuple,
                     dist: str, fail_prob: float, passes: int,
                     has_extras: bool = False, block: int = 1,
-                    backend: str = "scan", trace: bool = False):
+                    backend: str = "scan", scan: str = "seq",
+                    summary_backend: str = "xla", trace: bool = False):
     """Per-trial closed-loop stock replay at TASK granularity (task FCFS).
 
     The scalar oracle's backlog is one FIFO of *tasks*: a task joins the
@@ -610,6 +623,8 @@ def _stock_trial_fn(jobs: int, W: int, K: int, dep_t: tuple,
     dep_mask = jnp.array(dep_rows)
     root_j = jnp.array(root)
     N = jobs * K
+    if not block:
+        block = max(1, -(-N // 3))      # adaptive log-depth split
 
     def trial(key, rate_hz, rho, means, extras, offset, cv, stage_oh,
               oh_mu, oh_sigma):
@@ -640,33 +655,31 @@ def _stock_trial_fn(jobs: int, W: int, K: int, dep_t: tuple,
                            arrivals[:, None] + oh0[:, None], jnp.inf)
         z_flat = z.reshape(N)
 
-        npad = -(-N // block) * block
-
         def book(ready, full):
             # ONE merged event stream: every task of every job, ready
             # order.  The sort need not be stable: exact ties only occur
             # among one job's dep-free roots (shared arrival + oh0), whose
             # service draws are i.i.d. symmetric, so the FCFS order among
             # them is statistically irrelevant (the scalar sim pushes them
-            # in task-list order).
+            # in task-list order).  No padding: the substrate resolves a
+            # ragged tail as one final partial block.
             order = jnp.argsort(ready.reshape(N), stable=False)
             r_s = ready.reshape(N)[order]
             z_s = z_flat[order]
-            if npad > N:
-                # dead padding (ready = inf) books nothing and sorts last
-                r_s = jnp.concatenate([r_s, jnp.full((npad - N,), jnp.inf)])
-                z_s = jnp.concatenate([z_s, jnp.zeros((npad - N,))])
             if not full:
                 # the stage-depth fixed point only consumes finish times;
                 # start/worker are resolved on the trace's final pass (each
                 # dropped output is a (jobs*K,) scatter saved per pass)
                 fins, = stock_booking_fins(jnp.zeros(W), r_s, z_s,
-                                           block=block, backend=backend)
+                                           block=block, backend=backend,
+                                           scan=scan,
+                                           summary_backend=summary_backend)
                 return (jnp.zeros(N).at[order].set(fins[:N])
                         .reshape(jobs, K), None, None)
             fins, sts, wks = blocked_bestfit_booking(
                 jnp.zeros(W), r_s, z_s, block=block, full=True,
-                backend=backend)
+                backend=backend, scan=scan,
+                summary_backend=summary_backend)
             f = jnp.zeros(N).at[order].set(fins[:N]).reshape(jobs, K)
             st = jnp.zeros(N).at[order].set(sts[:N]).reshape(jobs, K)
             wk = jnp.zeros(N, jnp.int32).at[order].set(
@@ -697,6 +710,7 @@ def _stock_trial_fn(jobs: int, W: int, K: int, dep_t: tuple,
 @functools.lru_cache(maxsize=None)
 def _raptor_runner(jobs, W, A, F, K, seq_t, dep_t, dist, fail_prob,
                    block: int = 1, resolver: str = "fixpoint",
+                   scan: str = "seq", summary_backend: str = "xla",
                    trace: bool = False):
     """Jitted (trials,)-vmapped raptor runner, cached so repeated ``run()``
     calls reuse the compiled executable.  Config sweeps no longer live
@@ -704,16 +718,19 @@ def _raptor_runner(jobs, W, A, F, K, seq_t, dep_t, dist, fail_prob,
     same per-trial body over the config axis and shards it over the mesh.
     """
     trial = _raptor_trial_fn(jobs, W, A, F, K, seq_t, dep_t, dist,
-                             fail_prob, block, resolver, trace)
+                             fail_prob, block, resolver, scan,
+                             summary_backend, trace)
     return jax.jit(jax.vmap(trial, in_axes=(0,) + (None,) * 9))
 
 
 @functools.lru_cache(maxsize=None)
 def _stock_runner(jobs, W, K, dep_t, dist, fail_prob, passes,
                   has_extras: bool = False, block: int = 1,
-                  backend: str = "scan", trace: bool = False):
+                  backend: str = "scan", scan: str = "seq",
+                  summary_backend: str = "xla", trace: bool = False):
     trial = _stock_trial_fn(jobs, W, K, dep_t, dist, fail_prob,
-                            passes, has_extras, block, backend, trace)
+                            passes, has_extras, block, backend, scan,
+                            summary_backend, trace)
     return jax.jit(jax.vmap(trial, in_axes=(0,) + (None,) * 9))
 
 
@@ -765,7 +782,9 @@ class QueueFlightSim:
                  load: str = "medium", arrival_rate_hz: float = None,
                  stream_latency_ms: float = 0.5, seed: int = 0,
                  stock_extra_passes: int = 1, block: int = None,
-                 resolver: str = "auto", booking_backend: str = "scan"):
+                 resolver: str = "auto", scan: str = "auto",
+                 booking_backend: str = "scan",
+                 summary_backend: str = "xla"):
         """``stock_extra_passes``: extra fixed-point iterations of the
         task-FCFS stock schedule beyond the ``stage_depth + 1`` needed to
         materialize every ready time.  Dep-free stock graphs (keygen,
@@ -775,19 +794,25 @@ class QueueFlightSim:
         sits within ~1% of the scalar oracle at 0 extras and is converged
         at 1 (tests/test_sim_queue.py).
 
-        ``block``/``resolver``: the blocked event-replay configuration
-        (``sim/scan_core.py``).  Results are block-size and resolver
-        invariant (bitwise — tests/test_queue_properties.py), so these are
-        pure performance knobs: ``block=None``/``resolver="auto"``
+        ``block``/``resolver``/``scan``: the blocked event-replay
+        configuration (``sim/scan_core.py``).  Results are block-size,
+        resolver, and scan-mode invariant (bitwise —
+        tests/test_queue_properties.py), so these are pure performance
+        knobs: ``block=None``/``resolver="auto"``/``scan="auto"``
         resolves per engine and backend via :func:`auto_config`;
         ``block=1`` forces the sequential oracle scan (conservative race
         budget — bit-for-bit the pre-blocking engine); larger blocks run
         the chunked substrate with ``resolver`` "fixpoint" (bounded
         parallel fixed point, the depth-reduction mode) or "unrolled"
-        (fused sequential chunks, the host-throughput mode).
+        (fused sequential chunks), chained either sequentially
+        (``scan="seq"``) or through the associative max-plus summary
+        prefix (``scan="logdepth"`` — O(log nb) depth per outer Jacobi
+        pass; work-bound on hosts, see EXPERIMENTS.md §log-depth).
         ``booking_backend``: "scan" (the jnp substrate) or "pallas" (the
         fused VMEM booking kernel, ``repro.kernels.queue_booking``) for
-        the stock stream."""
+        the stock stream; ``summary_backend`` routes the log-depth
+        summary prefix ("xla" or the ``repro.kernels.maxplus_scan``
+        VMEM kernel)."""
         self.wl = wl
         self.W = int(num_workers)
         self.A = int(num_azs)
@@ -810,7 +835,9 @@ class QueueFlightSim:
         self.utilization = self.rate_hz * wl.work_est_ws / self.W
         self._block = None if block is None else int(block)
         self.resolver = str(resolver)
+        self.scan = str(scan)
         self.booking_backend = str(booking_backend)
+        self.summary_backend = str(summary_backend)
         ha = self.A > 1
         self.oh_mu, self.oh_sigma = lognormal_params(
             *OverheadModel.TABLE[(ha, load)])
@@ -834,33 +861,35 @@ class QueueFlightSim:
                          else self._sdepth + 1 + int(stock_extra_passes))
 
     # -- compiled runners ------------------------------------------------
-    def engine_config(self, engine: str) -> Tuple[int, str]:
-        """Resolved (block, resolver) for ``engine`` ("raptor"/"stock"):
-        explicit constructor knobs win, the rest comes from
-        :func:`auto_config`'s measured per-backend policy."""
-        blk, res = auto_config(engine)
+    def engine_config(self, engine: str) -> Tuple[int, str, str]:
+        """Resolved (block, resolver, scan) for ``engine``
+        ("raptor"/"stock"): explicit constructor knobs win, the rest
+        comes from :func:`auto_config`'s measured per-backend policy
+        (forcing ``scan`` re-resolves the defaults for that chain mode)."""
+        blk, res, sc = auto_config(engine, self.scan)
         if self._block is not None:
             blk = self._block
         if self.resolver != "auto":
             res = self.resolver
-        return blk, res
+        return blk, res, sc
 
     def _raptor_fn(self, jobs: int, trace: bool = False):
-        blk, res = self.engine_config("raptor")
+        blk, res, sc = self.engine_config("raptor")
         return _raptor_runner(
             int(jobs), self.W, self.A, self.flight, len(self.wl.tasks),
             tuple(map(tuple, self._seq.tolist())),
             tuple(map(tuple, self._dep.tolist())),
-            self.wl.dist, self.wl.fail_prob, blk, res, trace)
+            self.wl.dist, self.wl.fail_prob, blk, res, sc,
+            self.summary_backend, trace)
 
     def _stock_fn(self, jobs: int, trace: bool = False):
-        blk, _ = self.engine_config("stock")
+        blk, _, sc = self.engine_config("stock")
         return _stock_runner(
             int(jobs), self.W, len(self._smeans),
             tuple(map(tuple, self._sdep.tolist())),
             self.wl.dist, self.wl.fail_prob, self._spasses,
             bool(self._sextras.any()), blk,
-            self.booking_backend, trace)
+            self.booking_backend, sc, self.summary_backend, trace)
 
     def _raptor_args(self):
         wl = self.wl

@@ -1,0 +1,134 @@
+"""Max-plus summary-scan Pallas kernel vs the associative_scan oracle.
+
+Runs in interpret mode so the kernel tier is exercised on CPU-only CI
+(ci.yml runs this file explicitly).  The doubling scan inside the kernel
+brackets the operator tape differently from both the oracle's
+``lax.associative_scan`` tree and a sequential fold, so bitwise parity
+here is exactly the associativity the algebra tests promise — now checked
+through the real Pallas lowering, including the -inf identity padding the
+shift steps introduce.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+except ModuleNotFoundError:  # bare env: property tests skip, rest still run
+    from _hypothesis_compat import hypothesis, st
+
+from repro.kernels.maxplus_scan.ops import maxplus_entries
+from repro.kernels.maxplus_scan.ref import maxplus_scan_ref
+
+
+def make(seed, T, nb, W, diag_free=True, p_ninf=0.25):
+    """Random factored operator tapes.  Integer-valued float32 keeps the
+    d1+d2 / b1+d2 composes exact so every comparison can be bitwise;
+    ``diag_free=False`` emits the production shape (diag identically 0,
+    where compose degenerates to elementwise max)."""
+    rng = np.random.default_rng(seed)
+    if diag_free:
+        diag = rng.integers(-20, 20, (T, nb, W)).astype(np.float32)
+    else:
+        diag = np.zeros((T, nb, W), np.float32)
+    off = rng.integers(0, 1000, (T, nb, W)).astype(np.float32)
+    off = np.where(rng.uniform(size=off.shape) < p_ninf, -np.inf, off)
+    wf0 = rng.integers(0, 500, (T, W)).astype(np.float32)
+    return jnp.asarray(diag), jnp.asarray(off), jnp.asarray(wf0)
+
+
+def seq_fold(diag, off, wf0):
+    """Sequential-fold oracle, independent of any scan machinery."""
+    diag, off, wf0 = (np.asarray(x) for x in (diag, off, wf0))
+    T, nb, W = diag.shape
+    entries = np.empty((T, nb, W), np.float32)
+    wf = wf0.copy()
+    for k in range(nb):
+        entries[:, k] = wf
+        wf = np.maximum(wf + diag[:, k], off[:, k])
+    return entries, wf
+
+
+CASES = [
+    # (T, nb, W) — nb spans 1, powers of two, and ragged non-powers
+    # (the doubling sweep's shift padding only matters off-power)
+    (2, 1, 15),
+    (2, 8, 15),
+    (3, 5, 15),       # non-power nb
+    (4, 13, 7),       # non-power nb, odd W
+    (1, 32, 1),       # single worker
+    (2, 48, 31),
+]
+
+
+@pytest.mark.parametrize("T,nb,W", CASES)
+@pytest.mark.parametrize("diag_free", [True, False])
+def test_kernel_matches_ref(T, nb, W, diag_free):
+    diag, off, wf0 = make(0, T, nb, W, diag_free=diag_free)
+    ent, wf = maxplus_entries(diag, off, wf0, interpret=True)
+    rent, rwf = maxplus_scan_ref(diag, off, wf0)
+    np.testing.assert_array_equal(np.asarray(ent), np.asarray(rent))
+    np.testing.assert_array_equal(np.asarray(wf), np.asarray(rwf))
+    # and both agree with a plain sequential fold
+    sent, swf = seq_fold(diag, off, wf0)
+    np.testing.assert_array_equal(np.asarray(ent), sent)
+    np.testing.assert_array_equal(np.asarray(wf), swf)
+
+
+def test_all_ninf_offsets_pass_through():
+    """A tape of pure-diagonal operators (b = -inf everywhere, the
+    identity's offset) must shift wf0 and book nothing."""
+    T, nb, W = 2, 6, 8
+    diag, _, wf0 = make(1, T, nb, W)
+    off = jnp.full((T, nb, W), -jnp.inf, jnp.float32)
+    ent, wf = maxplus_entries(diag, off, wf0, interpret=True)
+    expect = np.asarray(wf0)[:, None] + np.cumsum(np.asarray(diag), axis=1)
+    np.testing.assert_array_equal(np.asarray(ent[:, 0]), np.asarray(wf0))
+    np.testing.assert_array_equal(np.asarray(ent[:, 1:]), expect[:, :-1])
+    np.testing.assert_array_equal(np.asarray(wf), expect[:, -1])
+
+
+def test_entry_rows_are_exclusive():
+    """Row k must NOT include block k's own operator: perturbing block k
+    changes rows > k and wf_out but leaves rows <= k untouched."""
+    diag, off, wf0 = make(2, 1, 9, 5, diag_free=False)
+    ent1, _ = maxplus_entries(diag, off, wf0, interpret=True)
+    off2 = off.at[:, 4].set(2000.0)
+    ent2, wf2 = maxplus_entries(diag, off2, wf0, interpret=True)
+    np.testing.assert_array_equal(
+        np.asarray(ent1[:, :5]), np.asarray(ent2[:, :5]))
+    assert np.all(np.asarray(ent2[:, 5:]) >= 2000.0)
+    assert np.all(np.asarray(wf2) >= 2000.0)
+
+
+def test_engine_pallas_summary_matches_xla():
+    """The in-engine route: QueueFlightSim(scan="logdepth",
+    summary_backend="pallas") must replay bit-for-bit like the XLA
+    associative_scan — and both like the sequential chain."""
+    from repro.sim.vector_queue import QueueFlightSim, wordcount_queue
+    kw = dict(num_workers=15, num_azs=3, load="high", seed=0,
+              block=16, resolver="unrolled")
+    o = QueueFlightSim(wordcount_queue(), **kw)
+    a = QueueFlightSim(wordcount_queue(), scan="logdepth", **kw)
+    b = QueueFlightSim(wordcount_queue(), scan="logdepth",
+                       summary_backend="pallas", **kw)
+    ro, ra, rb = (s.run(96, 2, raptor=True).response_ms for s in (o, a, b))
+    np.testing.assert_array_equal(np.asarray(ra), np.asarray(rb))
+    np.testing.assert_array_equal(np.asarray(ro), np.asarray(rb))
+    ta, tb = (s.trace_run(64, 2, raptor=False) for s in (a, b))
+    for k in ("ready", "start", "fin", "worker"):
+        np.testing.assert_array_equal(ta[k], tb[k])
+
+
+@hypothesis.given(seed=st.integers(0, 1000), nb=st.integers(1, 24),
+                  W=st.sampled_from([1, 7, 15]),
+                  diag_free=st.booleans())
+@hypothesis.settings(max_examples=10, deadline=None)
+def test_kernel_property(seed, nb, W, diag_free):
+    diag, off, wf0 = make(seed, 2, nb, W, diag_free=diag_free)
+    ent, wf = maxplus_entries(diag, off, wf0, interpret=True)
+    rent, rwf = maxplus_scan_ref(diag, off, wf0)
+    np.testing.assert_array_equal(np.asarray(ent), np.asarray(rent))
+    np.testing.assert_array_equal(np.asarray(wf), np.asarray(rwf))

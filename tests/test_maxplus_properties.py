@@ -1,0 +1,144 @@
+"""Algebraic properties of the factored max-plus block summaries.
+
+The log-depth chain (``scan_core.maxplus_*`` + ``scan="logdepth"``) is
+exact only because the summary algebra is: composition of factored
+(diag, offset) operators must be associative (so the prefix scan may
+bracket freely), apply must be a homomorphism over compose, and the
+summary of a concatenated stream must equal the composition of its
+blocks' summaries.  Integer-valued float32 operands keep every check
+bitwise (float ``+`` is exact on small integers, ``max`` always is);
+the production engines only ever emit diag = 0 — pure float max — which
+is what keeps ``scan="logdepth"`` bitwise against the sequential oracle
+at arbitrary operands too.
+
+Two tiers like the other property modules: hypothesis when installed,
+a seeded grid fallback otherwise (shared helpers).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+except ModuleNotFoundError:  # bare env: property tier skips, grid runs
+    from _hypothesis_compat import hypothesis, st
+
+from repro.sim.scan_core import (block_summary, booking_contrib,  # noqa: E402
+                                 maxplus_apply, maxplus_compose,
+                                 maxplus_identity, maxplus_prefix_entries)
+
+
+def rand_op(rng, W, lo=-20, hi=20, p_ninf=0.25):
+    """Random factored operator with integer-valued float32 parts; the
+    offset mixes -inf (the "books nothing there" value) at rate p_ninf."""
+    d = rng.integers(lo, hi, W).astype(np.float32)
+    b = rng.integers(lo, hi, W).astype(np.float32)
+    b = np.where(rng.uniform(size=W) < p_ninf, -np.inf, b)
+    return jnp.asarray(d), jnp.asarray(b)
+
+
+def rand_stream(rng, n, W, M=2):
+    """Random booking estimates: worker indices (with dead -1 slots) and
+    integer release times, the (widx, rel) shape block_summary consumes."""
+    widx = rng.integers(-1, W, (n, M)).astype(np.int32)
+    rel = rng.integers(0, 1000, (n, M)).astype(np.float32)
+    rel = np.where(widx < 0, -np.inf, rel)
+    return jnp.asarray(widx), jnp.asarray(rel)
+
+
+def check_associative(rng, W):
+    f, g, h = (rand_op(rng, W) for _ in range(3))
+    left = maxplus_compose(maxplus_compose(f, g), h)
+    right = maxplus_compose(f, maxplus_compose(g, h))
+    for a, b in zip(left, right):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # and both bracketings act identically on a vector
+    wf = jnp.asarray(rng.integers(-20, 20, W).astype(np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(maxplus_apply(left, wf)),
+        np.asarray(maxplus_apply(h, maxplus_apply(g, maxplus_apply(f, wf)))))
+
+
+def check_apply_homomorphism(rng, W):
+    f, g = rand_op(rng, W), rand_op(rng, W)
+    wf = jnp.asarray(rng.integers(-20, 20, W).astype(np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(maxplus_apply(maxplus_compose(f, g), wf)),
+        np.asarray(maxplus_apply(g, maxplus_apply(f, wf))))
+    ident = maxplus_identity(W)
+    for comp in (maxplus_compose(ident, f), maxplus_compose(f, ident)):
+        for a, b in zip(comp, f):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def check_summary_of_concat(rng, W, blocks):
+    """summarize(concat(blocks)) == compose(summarize(block) for blocks)
+    — offset-only operators, exactly the production summaries."""
+    parts = [rand_stream(rng, n, W) for n in blocks]
+    whole = (jnp.concatenate([p[0] for p in parts]),
+             jnp.concatenate([p[1] for p in parts]))
+    op = maxplus_identity(W)
+    for widx, rel in parts:
+        zero = jnp.zeros((W,), jnp.float32)
+        op = maxplus_compose(op, (zero, block_summary(W, widx, rel)))
+    np.testing.assert_array_equal(
+        np.asarray(op[1]), np.asarray(block_summary(W, *whole)))
+    # applying the composed operator == folding the raw contributions
+    wf = jnp.asarray(rng.integers(0, 50, W).astype(np.float32))
+    folded = jnp.max(jnp.concatenate(
+        [wf[None], booking_contrib(W, *whole)]), axis=0)
+    np.testing.assert_array_equal(
+        np.asarray(maxplus_apply(op, wf)), np.asarray(folded))
+
+
+def check_prefix_entries(rng, W, nb):
+    """The associative prefix's entries equal a sequential fold."""
+    diag = jnp.stack([rand_op(rng, W)[0] for _ in range(nb)])
+    off = jnp.stack([rand_op(rng, W)[1] for _ in range(nb)])
+    wf0 = jnp.asarray(rng.integers(-10, 10, W).astype(np.float32))
+    entries, wf_out = maxplus_prefix_entries(diag, off, wf0)
+    wf = wf0
+    for k in range(nb):
+        np.testing.assert_array_equal(np.asarray(entries[k]), np.asarray(wf))
+        wf = maxplus_apply((diag[k], off[k]), wf)
+    np.testing.assert_array_equal(np.asarray(wf_out), np.asarray(wf))
+
+
+# ------------------------------------------------------------------
+# seeded grid tier
+# ------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(8))
+@pytest.mark.parametrize("W", [1, 4, 15])
+def test_maxplus_algebra_grid(seed, W):
+    rng = np.random.default_rng(seed)
+    check_associative(rng, W)
+    check_apply_homomorphism(rng, W)
+    check_summary_of_concat(rng, W, blocks=[3, 1, 5, 2])
+    check_prefix_entries(rng, W, nb=6)
+
+
+# ------------------------------------------------------------------
+# hypothesis tier
+# ------------------------------------------------------------------
+
+@hypothesis.given(seed=st.integers(0, 2**16),
+                  W=st.integers(min_value=1, max_value=24))
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_compose_associative_property(seed, W):
+    rng = np.random.default_rng(seed)
+    check_associative(rng, W)
+    check_apply_homomorphism(rng, W)
+
+
+@hypothesis.given(seed=st.integers(0, 2**16),
+                  W=st.integers(min_value=1, max_value=24),
+                  blocks=st.lists(st.integers(min_value=1, max_value=9),
+                                  min_size=1, max_size=6))
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_summary_concat_property(seed, W, blocks):
+    rng = np.random.default_rng(seed)
+    check_summary_of_concat(rng, W, blocks)

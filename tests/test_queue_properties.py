@@ -179,29 +179,35 @@ def test_trace_matches_run():
 
 
 # ------------------------------------------------------------------
-# blocked event-replay substrate: block-size / resolver invariance
+# blocked event-replay substrate: block / resolver / scan invariance
 # ------------------------------------------------------------------
 # block=1 is the sequential oracle scan — bit-for-bit the pre-blocking
 # engine, conservative full race budget.  Every blocked configuration
 # (sim/scan_core.py: the unrolled chunks and the bounded parallel fixed
 # point, plus the tight K-completion race budget the blocked raptor
-# replay runs on) must reproduce it BITWISE, so agreement here
-# simultaneously validates the blocking, the fixed point's exactness,
-# and the tight-budget theorem.  Mean/p50/p99 equality follows from the
-# pointwise equality but is asserted explicitly (the acceptance shape).
+# replay runs on, chained sequentially or through the associative
+# max-plus summary prefix — scan="logdepth") must reproduce it BITWISE,
+# so agreement here simultaneously validates the blocking, the fixed
+# point's exactness, the tight-budget theorem, and the offset-only
+# summary algebra.  Mean/p50/p99 equality follows from the pointwise
+# equality but is asserted explicitly (the acceptance shape).
 
-BLOCKED_CONFIGS = [(1, "auto"), (16, "unrolled"), (16, "fixpoint"),
-                   (64, "fixpoint")]
+BLOCKED_CONFIGS = [(1, "auto", "auto"),
+                   (16, "unrolled", "seq"), (16, "fixpoint", "seq"),
+                   (64, "fixpoint", "seq"),
+                   (16, "unrolled", "logdepth"),
+                   (64, "fixpoint", "logdepth"),
+                   (0, "unrolled", "logdepth")]   # 0 = adaptive split
 
 
 @pytest.mark.parametrize("raptor", [False, True])
 def test_blocked_replay_block_size_invariance(raptor):
     """wordcount at util 0.75: staged DAG, the hardest blocked case."""
     base = None
-    for block, resolver in BLOCKED_CONFIGS:
+    for block, resolver, scan in BLOCKED_CONFIGS:
         sim = QueueFlightSim(wordcount_queue(), num_workers=15, num_azs=3,
                              load="high", seed=9, block=block,
-                             resolver=resolver)
+                             resolver=resolver, scan=scan)
         tr = sim.trace_run(192, 3, raptor=raptor)
         if raptor:
             assert_raptor_invariants(tr, 15)
@@ -217,20 +223,24 @@ def test_blocked_replay_block_size_invariance(raptor):
             for k in tr:
                 np.testing.assert_array_equal(
                     tr[k], base[0][k],
-                    err_msg=f"block={block}/{resolver}: trace {k} diverged")
+                    err_msg=f"block={block}/{resolver}/{scan}: "
+                            f"trace {k} diverged")
             s = res.summary()
             for k in ("mean", "median", "p99"):
-                assert s[k] == base[1][k], (block, resolver, k)
+                assert s[k] == base[1][k], (block, resolver, scan, k)
 
 
 def test_blocked_replay_direct_start_invariance():
     """keygen (dep-free, direct-start members) across blocks, run()-level
     bitwise — covers the fast fig6 path incl. the K-event race budget."""
     base = None
-    for block, resolver in ((1, "auto"), (8, "unrolled"), (32, "fixpoint")):
+    for block, resolver, scan in ((1, "auto", "auto"),
+                                  (8, "unrolled", "seq"),
+                                  (32, "fixpoint", "seq"),
+                                  (32, "unrolled", "logdepth")):
         sim = QueueFlightSim(keygen_queue(), num_workers=15, num_azs=3,
                              load="medium", seed=4, block=block,
-                             resolver=resolver)
+                             resolver=resolver, scan=scan)
         r = np.asarray(sim.run(256, 4, raptor=True).response_ms)
         s = np.asarray(sim.run(256, 4, raptor=False).response_ms)
         if base is None:
@@ -240,16 +250,53 @@ def test_blocked_replay_direct_start_invariance():
             np.testing.assert_array_equal(s, base[1])
 
 
+def test_blocked_replay_ragged_tail_invariance():
+    """Block sizes that do NOT divide the 190-event stream (B ∈ {3, 7,
+    48}): the remainder must resolve as one final partial block — a
+    phantom (padded) event that books a worker or perturbs the carried
+    W-vector shows up bitwise in runs or traces.  Pinned against the
+    block=1 oracle on BOTH engines, runs AND traces, both chain modes."""
+    jobs, trials = 190, 2
+    for raptor in (False, True):
+        oracle = QueueFlightSim(keygen_queue(), num_workers=15, num_azs=3,
+                                load="medium", seed=7, block=1)
+        base = np.asarray(oracle.run(jobs, trials,
+                                     raptor=raptor).response_ms)
+        base_tr = oracle.trace_run(jobs, trials, raptor=raptor)
+        for block in (3, 7, 48):
+            for scan in ("seq", "logdepth"):
+                sim = QueueFlightSim(keygen_queue(), num_workers=15,
+                                     num_azs=3, load="medium", seed=7,
+                                     block=block, resolver="unrolled",
+                                     scan=scan)
+                r = np.asarray(sim.run(jobs, trials,
+                                       raptor=raptor).response_ms)
+                np.testing.assert_array_equal(
+                    r, base,
+                    err_msg=f"raptor={raptor} block={block}/{scan}: "
+                            f"runs diverged")
+                tr = sim.trace_run(jobs, trials, raptor=raptor)
+                for k in tr:
+                    np.testing.assert_array_equal(
+                        tr[k], base_tr[k],
+                        err_msg=f"raptor={raptor} block={block}/{scan}: "
+                                f"trace {k} diverged")
+
+
 def test_blocked_replay_with_failures_invariance():
     """fail_prob > 0 exercises the full F*K race budget and the error
     broadcast path through the substrate; blocked must still equal the
-    oracle bitwise (responses AND the ok mask)."""
+    oracle bitwise (responses AND the ok mask) under either chain."""
     import dataclasses
     wl = dataclasses.replace(wordcount_queue(), fail_prob=0.3)
     base = None
-    for block, resolver in ((1, "auto"), (16, "fixpoint"), (16, "unrolled")):
+    for block, resolver, scan in ((1, "auto", "auto"),
+                                  (16, "fixpoint", "seq"),
+                                  (16, "unrolled", "seq"),
+                                  (16, "unrolled", "logdepth")):
         sim = QueueFlightSim(wl, num_workers=15, num_azs=3, load="medium",
-                             seed=2, block=block, resolver=resolver)
+                             seed=2, block=block, resolver=resolver,
+                             scan=scan)
         res = sim.run(192, 3, raptor=True)
         r = (np.asarray(res.response_ms), np.asarray(res.ok))
         if base is None:
@@ -257,6 +304,27 @@ def test_blocked_replay_with_failures_invariance():
         else:
             np.testing.assert_array_equal(r[0], base[0])
             np.testing.assert_array_equal(r[1], base[1])
+
+
+def test_fixpoint_pass_bound_with_failures():
+    """Whole-stream fixpoint block at fail_prob > 0 under HA placement:
+    the bounded pass count (<= block) must reach the exact schedule.
+    Regression for the rows-based termination test (ISSUE 6): a dead
+    event's worker pick may flap between passes — convergence is judged
+    on the observed per-event W-vectors, which must neither stall early
+    exit nor mask unconverged observations."""
+    import dataclasses
+    wl = dataclasses.replace(keygen_queue(), fail_prob=0.25)
+    jobs, trials = 96, 3
+    oracle = QueueFlightSim(wl, num_workers=15, num_azs=3, load="high",
+                            seed=11, block=1)
+    base = oracle.run(jobs, trials, raptor=True)
+    sim = QueueFlightSim(wl, num_workers=15, num_azs=3, load="high",
+                         seed=11, block=jobs, resolver="fixpoint")
+    res = sim.run(jobs, trials, raptor=True)
+    np.testing.assert_array_equal(np.asarray(res.response_ms),
+                                  np.asarray(base.response_ms))
+    np.testing.assert_array_equal(np.asarray(res.ok), np.asarray(base.ok))
 
 
 # ------------------------------------------------------------------

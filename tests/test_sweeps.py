@@ -89,6 +89,86 @@ def test_sharded_runs_bit_identical_across_device_counts():
 
 
 # ------------------------------------------------------------------
+# force_host_devices: XLA_FLAGS hygiene (subprocess: the flag and the
+# backend-live state are process-level)
+# ------------------------------------------------------------------
+
+def _run_snippet(body, extra_env=None):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(REPO, "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    env.pop("XLA_FLAGS", None)
+    env.update(extra_env or {})
+    return subprocess.run([sys.executable, "-c", body], cwd=REPO,
+                          capture_output=True, text=True, timeout=600,
+                          env=env)
+
+
+def test_force_host_devices_appends_to_user_flags():
+    """A user-supplied XLA_FLAGS value must survive verbatim — the device
+    count flag is appended, never clobbered over it."""
+    r = _run_snippet(r"""
+import os
+from repro.sim.sweeps import force_host_devices
+assert force_host_devices(4) == 4
+flags = os.environ["XLA_FLAGS"]
+assert "--xla_cpu_enable_fast_math=false" in flags, flags
+assert "--xla_force_host_platform_device_count=4" in flags, flags
+print("APPEND-OK")
+""", extra_env={"XLA_FLAGS": "--xla_cpu_enable_fast_math=false"})
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "APPEND-OK" in r.stdout
+
+
+def test_force_host_devices_respects_user_count():
+    """A user-set device-count flag wins: no append, no override."""
+    r = _run_snippet(r"""
+import os
+from repro.sim.sweeps import force_host_devices
+assert force_host_devices(8) == 2
+assert os.environ["XLA_FLAGS"].count(
+    "--xla_force_host_platform_device_count") == 1
+print("USER-OK")
+""", extra_env={
+        "XLA_FLAGS": "--xla_force_host_platform_device_count=2"})
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "USER-OK" in r.stdout
+
+
+def test_force_host_devices_errors_after_backend_init():
+    """Once the backend is live with fewer devices than requested, the
+    call cannot take effect — it must raise, not silently unshard."""
+    r = _run_snippet(r"""
+import jax
+n = jax.device_count()  # initializes the backend
+from repro.sim.sweeps import force_host_devices
+try:
+    force_host_devices(n + 7)
+except RuntimeError as e:
+    assert "backend" in str(e) and "XLA_FLAGS" in str(e), e
+    print("RAISE-OK")
+else:
+    raise SystemExit("expected RuntimeError after backend init")
+""")
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "RAISE-OK" in r.stdout
+
+
+def test_force_host_devices_noop_when_satisfied():
+    """Backend already live with enough devices: no error, returns the
+    live count (callers size shards on the return value)."""
+    r = _run_snippet(r"""
+import jax
+n = jax.device_count()
+from repro.sim.sweeps import force_host_devices
+assert force_host_devices(n) == n
+print("NOOP-OK")
+""")
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "NOOP-OK" in r.stdout
+
+
+# ------------------------------------------------------------------
 # bucketing partitions the grid (shared helper for both tiers)
 # ------------------------------------------------------------------
 
