@@ -25,6 +25,7 @@ TRACKED = [
     (("queue_logdepth", "jobs_per_s"), "log-depth summary-chain queue jobs/s"),
     (("dag_wordcount", "jobs_per_s"), "wordcount DAG jobs/s"),
     (("queue_stock_taskfcfs", "jobs_per_s"), "task-FCFS stock jobs/s"),
+    (("queue_faults", "jobs_per_s"), "fault-injected queue jobs/s"),
     (("fig6_sweep", "vector_jobs_per_s"), "fig6 load-sweep jobs/s"),
     (("sweep_sharded", "jobs_per_s"), "device-sharded sweep-grid jobs/s"),
 ]

@@ -152,6 +152,8 @@ def bench_sim_vector(trials: int = 10000):
     import jax
     import numpy as np
     from repro.sim.experiments import HA
+    from repro.sim.faults import FaultProfile
+    from repro.sim.policies import RecoveryPolicy
     from repro.sim.vector import VectorFlightSim, keygen_vector
     from repro.sim.vector_queue import (QueueFlightSim, keygen_queue,
                                         load_sweep, wordcount_queue)
@@ -365,6 +367,46 @@ def bench_sim_vector(trials: int = 10000):
          f"scalar={sn/ss:.0f}j/s_vector={tf_tps:.0f}j/s"
          f"_speedup={tf_tps/(sn/ss):.0f}x_cold={tf_cold:.1f}s"
          f"_warm={tf_warm:.2f}s_target>=20x")
+
+    # ---- queue_faults: the attempt-expanded fault/policy path ----------
+    # keygen under Markov-modulated AZ brownouts + worker crashes with a
+    # timeout/retry/hedge recovery policy (sim/faults.py, sim/policies.py).
+    # The attempt expansion multiplies the event stream by (1 + retries +
+    # hedge), so this tier tracks the fault path's own throughput AND pins
+    # its blocked-replay bitwise invariance against the block=1 oracle —
+    # the same acceptance the fault property tests enforce.
+    f_prof = FaultProfile(az_mtbf_ms=24_000.0, az_mttr_ms=6_000.0,
+                          degraded_inflation=2.0, degraded_fail_prob=0.05,
+                          crash_mtbf_ms=400_000.0, crash_restart_ms=2_000.0)
+    f_pol = RecoveryPolicy(timeout_ms=6_000.0, max_retries=1,
+                           backoff_ms=50.0, hedge_ms=2_500.0)
+    f_jobs, f_trials = max(trials // 16, 128), 16
+    fwl = keygen_queue(fail_prob=0.01, faults=f_prof, recovery=f_pol)
+    fsim = QueueFlightSim(fwl, load="medium", seed=0, **HA)
+    rf, f_cold, f_warm = cold_warm(
+        lambda: fsim.run(f_jobs, f_trials, raptor=True))
+    f_wall = best_of(
+        lambda: fsim.run(f_jobs, f_trials,
+                         raptor=True).response_ms.block_until_ready())
+    f_tps = f_jobs * f_trials / f_wall
+    f1sim = QueueFlightSim(fwl, load="medium", seed=0, block=1, **HA)
+    rf1 = f1sim.run(f_jobs, f_trials, raptor=True)
+    f_exact = bool(np.array_equal(np.asarray(rf.response_ms),
+                                  np.asarray(rf1.response_ms)))
+    f_blk, f_res, _ = fsim.engine_config("raptor")
+    record["queue_faults"] = {
+        "vector_jobs": f_jobs * f_trials, "wall_s": f_wall,
+        "jobs_per_s": f_tps, "compile_cold_s": f_cold,
+        "compile_warm_s": f_warm, "block": f_blk, "resolver": f_res,
+        "bitwise_equals_oracle": f_exact,
+        "vs_queue_nofault": f_tps / b_tps,
+        "mean_ms": rf.summary()["mean"],
+        "fail_rate": rf.summary()["fail_rate"],
+    }
+    _row("sim_queue_faults", f_wall * 1e6 / (f_jobs * f_trials),
+         f"faulty={f_tps:.0f}j/s_x{f_tps/b_tps:.2f}_vs_nofault"
+         f"_block={f_blk}/{f_res}_bitwise={f_exact}"
+         f"_cold={f_cold:.1f}s_warm={f_warm:.2f}s")
 
     # ---- sweep-sharded: the config grid over the device mesh -----------
     # The closed-loop utilisation grid through the SweepPlan driver

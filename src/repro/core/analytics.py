@@ -264,3 +264,127 @@ def mc_flight_time(num_tasks: int, flight: int, n_samples: int = 200_000,
             start_next(e, fin)
         times[s] = max(completed.values()) if completed else 0.0
     return summarize(times)
+
+
+# --------------------------------------------------------------------------
+# independence-prediction under a brownout mixture (sim/faults.py)
+# --------------------------------------------------------------------------
+# The paper's §4.2.1 predictions treat the flight members' service times as
+# mutually independent.  Under AZ brownouts the stationary marginal is a
+# MIXTURE — with probability pi the member's AZ is degraded and its draws
+# inflate — and the independence assumption becomes a claim about the
+# degradation indicators: with per-AZ (i.i.d.) brownouts the mixture draws
+# stay independent across members and the order-statistics prediction
+# still holds; with one shared (correlated) process every member degrades
+# together and the prediction breaks (experiments.fault_sweep measures
+# exactly this gap against the open-loop engine).
+
+def _mixture_draws(rng, shape, dist: str, mean: float, cv: float,
+                   offset: float):
+    if dist == "exp":
+        z = rng.exponential(mean, shape)
+    elif dist == "lognorm":
+        sigma2 = math.log(1.0 + cv * cv)
+        mu = math.log(mean) - sigma2 / 2.0
+        z = rng.lognormal(mu, math.sqrt(sigma2), shape)
+    else:
+        raise ValueError(f"unknown dist {dist!r}")
+    return z + offset
+
+
+def mc_flight_time_mixture(num_tasks: int, flight: int, *,
+                           p_deg: float = 0.0, inflation: float = 1.0,
+                           correlated: bool = False, dist: str = "exp",
+                           mean: float = 1.0, cv: float = 1.0,
+                           offset: float = 0.0, n_samples: int = 20_000,
+                           seed: int = 0) -> dict:
+    """Raptor flight completion time under the brownout service mixture.
+
+    Each member's AZ is degraded with probability ``p_deg`` (the CTMC's
+    stationary point, :attr:`FaultProfile.stationary_degraded`), inflating
+    every draw it serves by ``inflation`` for the whole invocation (the
+    open-loop stationary-snapshot semantics).  ``correlated=False`` draws
+    the indicators i.i.d. per member — the independence prediction;
+    ``correlated=True`` shares ONE indicator across the flight — the
+    regime the prediction cannot see.  Same cyclic-shift event-driven
+    race as :func:`mc_flight_time`.
+    """
+    rng = np.random.default_rng(seed)
+    nd = 2 * num_tasks + 2
+    z = _mixture_draws(rng, (n_samples, flight, nd), dist, mean, cv, offset)
+    deg = rng.random((n_samples, 1 if correlated else flight)) < p_deg
+    z = z * np.where(deg, inflation, 1.0)[:, :, None]
+    times = np.empty(n_samples)
+    seqs = [list(np.roll(np.arange(num_tasks), -e)) for e in range(flight)]
+    for s in range(n_samples):
+        completed: dict = {}
+        draw_i = [0] * flight
+        cur = [None] * flight
+        ptr = [0] * flight
+
+        def start_next(e, now):
+            while ptr[e] < num_tasks and seqs[e][ptr[e]] in completed:
+                ptr[e] += 1
+            if ptr[e] >= num_tasks:
+                cur[e] = None
+                return
+            t_ = seqs[e][ptr[e]]
+            cur[e] = (t_, now + z[s, e, draw_i[e]])
+            draw_i[e] = min(draw_i[e] + 1, nd - 1)
+            ptr[e] += 1
+
+        for e in range(flight):
+            start_next(e, 0.0)
+        while len(completed) < num_tasks:
+            running = [(c[1], e) for e, c in enumerate(cur) if c is not None]
+            if not running:
+                break
+            fin, e = min(running)
+            task = cur[e][0]
+            if task not in completed:
+                completed[task] = fin
+                for pe, c in enumerate(cur):
+                    if pe != e and c is not None and c[0] == task:
+                        start_next(pe, fin)
+            start_next(e, fin)
+        times[s] = max(completed.values()) if completed else 0.0
+    return summarize(times)
+
+
+def mc_forkjoin_mixture(num_tasks: int, *, p_deg: float = 0.0,
+                        inflation: float = 1.0, correlated: bool = False,
+                        dist: str = "exp", mean: float = 1.0,
+                        cv: float = 1.0, offset: float = 0.0,
+                        n_samples: int = 20_000, seed: int = 0) -> dict:
+    """Stock fork-join completion (max over tasks) under the same service
+    mixture — the denominator of the mixture speedup prediction.  Tasks
+    spread round-robin over AZs, so per-task indicators are i.i.d. in the
+    independent regime and shared in the correlated one."""
+    rng = np.random.default_rng(seed)
+    z = _mixture_draws(rng, (n_samples, num_tasks), dist, mean, cv, offset)
+    deg = rng.random((n_samples, 1 if correlated else num_tasks)) < p_deg
+    z = z * np.where(deg, inflation, 1.0)
+    return summarize(z.max(axis=1))
+
+
+def mixture_speedup_prediction(num_tasks: int, flight: int, *,
+                               p_deg: float, inflation: float,
+                               correlated: bool = False, dist: str = "exp",
+                               mean: float = 1.0, cv: float = 1.0,
+                               offset: float = 0.0,
+                               n_samples: int = 20_000,
+                               seed: int = 0) -> float:
+    """E[T_Raptor]/E[T_stock] under the brownout mixture — the §4.2.1
+    speedup prediction lifted to a degraded-but-independent cluster.  With
+    ``correlated=False`` this is what an independence-assuming predictor
+    forecasts; the fault_sweep experiment holds it against the measured
+    ratio in both brownout regimes."""
+    r = mc_flight_time_mixture(
+        num_tasks, flight, p_deg=p_deg, inflation=inflation,
+        correlated=correlated, dist=dist, mean=mean, cv=cv, offset=offset,
+        n_samples=n_samples, seed=seed)
+    s = mc_forkjoin_mixture(
+        num_tasks, p_deg=p_deg, inflation=inflation, correlated=correlated,
+        dist=dist, mean=mean, cv=cv, offset=offset, n_samples=n_samples,
+        seed=seed + 1)
+    return r["mean"] / s["mean"]

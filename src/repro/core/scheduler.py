@@ -36,6 +36,7 @@ class TaskResult:
     error: Optional[BaseException]
     executor: int
     t_finish: float
+    attempt: int = 0
 
 
 class StateStream:
@@ -57,8 +58,11 @@ class StateStream:
             cur = self._results.get(res.name)
             if res.error is not None:
                 # errors never overwrite a success, but every one is counted
-                # per distinct executor so waiters can detect a dead task
-                self._errors.setdefault(res.name, set()).add(res.executor)
+                # per distinct (executor, attempt) so waiters can detect a
+                # dead task: with an R-retry policy a task is only dead
+                # after size * (1 + R) failed attempts, not size failures
+                self._errors.setdefault(res.name, set()).add(
+                    (res.executor, res.attempt))
                 if cur is None:
                     self._results[res.name] = res
                 self._event.notify_all()
@@ -71,7 +75,7 @@ class StateStream:
             return True
 
     def error_count(self, name: str) -> int:
-        """Distinct executors whose attempt at ``name`` errored."""
+        """Distinct (executor, attempt) failures recorded for ``name``."""
         with self._lock:
             return len(self._errors.get(name, ()))
 
@@ -93,10 +97,14 @@ class StateStream:
     def wait_all(self, names, timeout: float,
                  dead_after: Optional[int] = None) -> bool:
         """Block until every name has an error-free result, the timeout
-        elapses, or — when ``dead_after`` is given — some task has errored
-        on ``dead_after`` distinct executors with no success (each member
-        attempts a task at most once, so the task can never complete and
-        the flight fails fast instead of burning the full timeout)."""
+        elapses, or — when ``dead_after`` is given — some task has
+        accumulated ``dead_after`` distinct failed attempts with no
+        success.  ``dead_after`` is the flight's whole attempt budget:
+        ``size * (1 + max_retries)`` under a recovery policy (each member
+        retries a failed task up to ``max_retries`` times before moving
+        on), collapsing to ``size`` without one — once the budget is
+        burned the task can never complete and the flight fails fast
+        instead of waiting out the full timeout."""
         deadline = time.monotonic() + timeout
         with self._lock:
             while True:
@@ -204,42 +212,64 @@ class _Executor(threading.Thread):
             inputs = {d: fl.stream.completed()[d].value
                       for d in spec.dependencies
                       if d in fl.stream.completed()}
-            ctx = TaskContext(fl.manifest.name, name, self.index,
-                              fl.context.fork(self.index) if self.index else fl.context,
-                              inputs)
-            self.current_ctx = ctx
-            fl.register_running(self.index, name)
-            t0 = time.monotonic()
-            try:
-                value = spec.fn(ctx) if spec.fn is not None else None
-                res = TaskResult(name, value, None, self.index, time.monotonic())
-                self.report.executed.append(name)
-                won = fl.stream.publish(res)
-                if won:
-                    fl.on_first_completion(name, self.index)
-            except Preempted:
-                self.report.preempted.append(name)
-            except Exception as e:  # noqa: BLE001 - executor failure path
-                self.report.failed.append(name)
-                fl.stream.publish(TaskResult(name, None, e, self.index,
-                                             time.monotonic()))
-            finally:
-                self.report.busy_time += time.monotonic() - t0
-                fl.register_running(self.index, None)
-                self.current_ctx = None
+            # retry loop: under a recovery policy a member re-attempts its
+            # own failed invocation (backoff between attempts) before
+            # moving on; every failed attempt is published so the stream's
+            # dead-task budget counts attempts, not members
+            for attempt in range(fl.attempt_budget):
+                if self._die.is_set():
+                    break
+                if attempt and fl.stream.visible(name) is not None:
+                    break          # a peer won while we were backing off
+                ctx = TaskContext(fl.manifest.name, name, self.index,
+                                  fl.context.fork(self.index) if self.index else fl.context,
+                                  inputs)
+                self.current_ctx = ctx
+                fl.register_running(self.index, name)
+                t0 = time.monotonic()
+                try:
+                    value = spec.fn(ctx) if spec.fn is not None else None
+                    res = TaskResult(name, value, None, self.index,
+                                     time.monotonic(), attempt)
+                    self.report.executed.append(name)
+                    won = fl.stream.publish(res)
+                    if won:
+                        fl.on_first_completion(name, self.index)
+                    break
+                except Preempted:
+                    self.report.preempted.append(name)
+                    break
+                except Exception as e:  # noqa: BLE001 - executor failure path
+                    self.report.failed.append(name)
+                    fl.stream.publish(TaskResult(name, None, e, self.index,
+                                                 time.monotonic(), attempt))
+                finally:
+                    self.report.busy_time += time.monotonic() - t0
+                    fl.register_running(self.index, None)
+                    self.current_ctx = None
+                if attempt + 1 < fl.attempt_budget:
+                    # backoff is idle time, not busy time
+                    self._die.wait(fl.backoff_s(attempt))
 
 
 class Flight:
     """N peer executors speculatively running one manifest invocation."""
 
     def __init__(self, manifest: ActionManifest, context: Optional[ExecutionContext] = None,
-                 size: Optional[int] = None, stream_latency: float = 0.0):
+                 size: Optional[int] = None, stream_latency: float = 0.0,
+                 recovery: Optional[Any] = None):
         validate_acyclic(manifest)
         self.manifest = manifest
         self.context = context or ExecutionContext.fresh()
         # elastic degradation (paper §3.3.2): fewer members than requested is
         # a smaller flight, not a failure.
         self.size = max(1, size if size is not None else manifest.concurrency)
+        # ``recovery`` is duck-typed (anything exposing max_retries /
+        # backoff_ms / backoff_jitter — e.g. repro.sim.policies.
+        # RecoveryPolicy) so the live engine carries no sim dependency;
+        # None keeps the historical one-attempt-per-member behavior
+        self.recovery = recovery
+        self.attempt_budget = 1 + int(getattr(recovery, "max_retries", 0) or 0)
         self.stream = StateStream(latency=stream_latency)
         self._running: Dict[int, Optional[str]] = {}
         self._lock = threading.Lock()
@@ -248,6 +278,13 @@ class Flight:
     def register_running(self, idx: int, name: Optional[str]):
         with self._lock:
             self._running[idx] = name
+
+    def backoff_s(self, attempt: int) -> float:
+        """Seconds to wait before retry ``attempt + 1`` (exponential;
+        jitter is deterministic-free here — the live engine's clock noise
+        already decorrelates members)."""
+        base = float(getattr(self.recovery, "backoff_ms", 0.0) or 0.0)
+        return base * (2.0 ** attempt) / 1000.0
 
     def on_first_completion(self, name: str, winner: int):
         """Broadcast receipt: preempt peers still running ``name``
@@ -262,7 +299,7 @@ class Flight:
         for ex in self._executors:
             ex.start()
         ok = self.stream.wait_all(self.manifest.names, timeout,
-                                  dead_after=self.size)
+                                  dead_after=self.size * self.attempt_budget)
         # flight complete: reclaim everything still running
         for ex in self._executors:
             ex.kill()
@@ -289,7 +326,8 @@ class RaptorScheduler:
 
     def invoke(self, manifest: ActionManifest,
                params: Optional[Dict[str, Any]] = None,
-               timeout: float = 60.0) -> FlightReport:
+               timeout: float = 60.0,
+               recovery: Optional[Any] = None) -> FlightReport:
         want = manifest.concurrency
         got = 0
         for _ in range(want):
@@ -298,7 +336,8 @@ class RaptorScheduler:
         try:
             ctx = ExecutionContext.fresh(user_params=params or {})
             flight = Flight(manifest, ctx, size=got,
-                            stream_latency=self.stream_latency)
+                            stream_latency=self.stream_latency,
+                            recovery=recovery)
             return flight.run(timeout=timeout)
         finally:
             for _ in range(got):

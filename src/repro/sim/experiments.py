@@ -311,3 +311,73 @@ def fig8_reliability(seed: int = 0, n_jobs_s: float = 600.0) -> Dict:
                 "theory_raptor_exact": raptor_failure_exact(p, n_tasks),
             }
     return out
+
+
+def fault_sweep(seed: int = 0, trials: int = 40_000,
+                mc_samples: int = 20_000) -> Dict:
+    """Independence-prediction hold vs break under AZ brownouts (§faults).
+
+    The §4.2.1 speedup predictions assume mutually independent member
+    executions.  This sweep injects the same stationary brownout mixture
+    twice — per-AZ i.i.d. processes vs ONE shared (correlated) process —
+    and holds the independence-assuming mixture prediction
+    (:func:`repro.core.analytics.mixture_speedup_prediction`) against the
+    measured open-loop mean ratio:
+
+    * **i.i.d. brownouts**: degradation indicators stay independent
+      across members, so the prediction tracks the measured ratio — the
+      paper's predictability claim survives a degraded-but-uncorrelated
+      cluster;
+    * **correlated brownouts**: the whole flight inflates together, the
+      min-race stops hedging the slow state, and the measured ratio pulls
+      away from the (unchanged) independence prediction — the regime
+      where the claim breaks.
+
+    A closed-loop row repeats the comparison with queueing (keygen on the
+    HA deployment) where correlation additionally feeds back through the
+    backlog, and a recovery-policy row shows timeout+retry clawing back
+    part of the correlated-tail damage.  Recorded in EXPERIMENTS.md
+    §faults.
+    """
+    from repro.core.analytics import mixture_speedup_prediction
+    from repro.sim.faults import FaultProfile
+    from repro.sim.policies import RecoveryPolicy
+    from repro.sim.vector import VectorFlightSim, exponential_vector
+    from repro.sim.vector_queue import QueueFlightSim, keygen_queue
+
+    mean_ms, K, F = 1000.0, 2, 2
+    base = dict(az_mtbf_ms=24_000.0, az_mttr_ms=6_000.0,
+                degraded_inflation=3.0)
+    pi = FaultProfile(**base).stationary_degraded
+    out: Dict[str, dict] = {"profile": dict(base, stationary_degraded=pi)}
+
+    # open-loop: prediction vs measured, both brownout regimes
+    pred = mixture_speedup_prediction(
+        K, F, p_deg=pi, inflation=base["degraded_inflation"],
+        n_samples=mc_samples, seed=seed)
+    for tag, corr in (("iid", False), ("correlated", True)):
+        fp = FaultProfile(correlated=corr, **base)
+        wl = exponential_vector(K, mean_ms, faults=fp)
+        pair = VectorFlightSim(wl, num_azs=3, flight=F, load="low",
+                               seed=seed).run_pair(trials)
+        out[f"open_loop/{tag}"] = {
+            "measured_ratio": pair["mean_ratio"],
+            "predicted_ratio": pred,
+            "rel_err": abs(pair["mean_ratio"] - pred) / pred,
+            "raptor": pair["raptor"], "stock": pair["stock"],
+        }
+
+    # closed-loop keygen: correlation also feeds the backlog; a recovery
+    # policy (timeout + retry) trims the correlated tail
+    pol = RecoveryPolicy(timeout_ms=6_000.0, max_retries=1,
+                         backoff_ms=50.0)
+    for tag, corr in (("iid", False), ("correlated", True)):
+        fp = FaultProfile(correlated=corr, **base)
+        sim = QueueFlightSim(keygen_queue(faults=fp), load="medium",
+                             seed=seed)
+        out[f"closed_loop/{tag}"] = sim.run_pair(jobs=1024, trials=16)
+        simp = QueueFlightSim(keygen_queue(faults=fp, recovery=pol),
+                              load="medium", seed=seed)
+        out[f"closed_loop_policy/{tag}"] = simp.run_pair(jobs=1024,
+                                                         trials=16)
+    return out

@@ -1,0 +1,213 @@
+"""Correlated fault injection: AZ brownouts + worker crashes as interval
+tables.
+
+The paper's central claim — Raptor's delay/failure gains are predictable
+from *mutually independent* executions — only holds while the
+infrastructure cooperates.  This module injects the two fault processes
+that break it:
+
+* **AZ brownouts**: each AZ alternates healthy/degraded through an on/off
+  CTMC (exp(``az_mtbf_ms``) up, exp(``az_mttr_ms``) down).  While degraded,
+  service times inflate by ``degraded_inflation`` and the per-attempt error
+  probability rises to ``degraded_fail_prob``.  ``correlated=True`` drives
+  every AZ from ONE shared process — the regime that destroys the
+  independence assumption outright (experiments.fault_sweep measures the
+  breakdown; EXPERIMENTS.md §faults).
+* **worker crashes**: each worker fails after exp(``crash_mtbf_ms``) of
+  wall-clock and is unavailable for ``crash_restart_ms``.  A crash kills
+  the in-flight attempt at the crash instant (the attempt fails and is
+  eligible for requeue under the active ``RecoveryPolicy``); bookings
+  never start inside an outage — they are pushed past its end.
+
+Both processes are **pre-drawn as interval tables** (``(n, max_intervals)``
+start/end pairs) so the vectorized engines stay scan-friendly: the blocked
+event-replay substrate needs every booking to be a deterministic function
+of the observed worker free-at vector plus exogenous inputs, and a static
+table is exactly such an input — which is why every blocked/logdepth
+config stays bitwise-identical to the block=1 sequential oracle *with
+faults enabled* (tests/test_queue_properties.py).
+
+Truncation convention (shared by the scalar oracle and the vector
+engines so agreement tests compare like with like): after the
+``max_intervals``-th drawn cycle the process is healthy forever.  Size
+the table to the horizon via :meth:`FaultProfile.coverage_ms`.
+
+Pure interval helpers come in two flavors kept in lockstep: batched
+``jnp`` forms used inside jitted scan bodies, and scalar ``*_np`` forms
+for the event-driven oracle.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultProfile:
+    """Declarative fault environment (hashable — it joins the static keys
+    of the cached trial builders and the sweep bucket keys).
+
+    Defaults describe a healthy cluster; ``enabled`` is False until a
+    brownout or crash process is configured.
+    """
+    az_mtbf_ms: float = 0.0        # mean healthy dwell per AZ (0 = off)
+    az_mttr_ms: float = 0.0        # mean degraded dwell per AZ
+    correlated: bool = False       # one shared brownout process for all AZs
+    degraded_inflation: float = 1.0   # service multiplier while degraded
+    degraded_fail_prob: float = 0.0   # per-attempt error prob while degraded
+    crash_mtbf_ms: float = 0.0     # mean per-worker uptime (0 = off)
+    crash_restart_ms: float = 0.0  # outage length after a crash
+    max_intervals: int = 64        # static brownout table width per AZ
+    max_crashes: int = 32          # static crash table width per worker
+
+    @property
+    def has_brownouts(self) -> bool:
+        return self.az_mtbf_ms > 0.0 and self.az_mttr_ms > 0.0
+
+    @property
+    def has_crashes(self) -> bool:
+        return self.crash_mtbf_ms > 0.0
+
+    @property
+    def enabled(self) -> bool:
+        return self.has_brownouts or self.has_crashes
+
+    @property
+    def stationary_degraded(self) -> float:
+        """CTMC stationary probability of the degraded state."""
+        if not self.has_brownouts:
+            return 0.0
+        return self.az_mttr_ms / (self.az_mtbf_ms + self.az_mttr_ms)
+
+    def coverage_ms(self) -> float:
+        """Expected horizon the drawn tables cover (mean cycle x width).
+        Size ``max_intervals``/``max_crashes`` so this comfortably exceeds
+        the replay horizon — beyond the table the process is healthy."""
+        covs = []
+        if self.has_brownouts:
+            covs.append((self.az_mtbf_ms + self.az_mttr_ms)
+                        * self.max_intervals)
+        if self.has_crashes:
+            covs.append((self.crash_mtbf_ms + self.crash_restart_ms)
+                        * self.max_crashes)
+        return min(covs) if covs else math.inf
+
+    # -- table draws (numpy: the scalar oracle's stream) -----------------
+    def brownout_tables_np(self, rng: np.random.Generator, num_azs: int):
+        """(num_azs, I) start/end tables; disabled -> [inf, inf) sentinel."""
+        if not self.has_brownouts:
+            s = np.full((num_azs, 1), np.inf)
+            return s, s.copy()
+        n = 1 if self.correlated else num_azs
+        up = rng.exponential(self.az_mtbf_ms, (n, self.max_intervals))
+        down = rng.exponential(self.az_mttr_ms, (n, self.max_intervals))
+        ends = np.cumsum(up + down, axis=1)
+        starts = ends - down
+        if self.correlated:
+            starts = np.broadcast_to(starts, (num_azs, self.max_intervals))
+            ends = np.broadcast_to(ends, (num_azs, self.max_intervals))
+        return np.ascontiguousarray(starts), np.ascontiguousarray(ends)
+
+    def crash_tables_np(self, rng: np.random.Generator, num_workers: int):
+        if not self.has_crashes:
+            s = np.full((num_workers, 1), np.inf)
+            return s, s.copy()
+        gaps = rng.exponential(self.crash_mtbf_ms,
+                               (num_workers, self.max_crashes))
+        ends = np.cumsum(gaps + self.crash_restart_ms, axis=1)
+        return ends - self.crash_restart_ms, ends
+
+    # -- table draws (jnp: inside a jitted trial, from a key split) ------
+    def brownout_tables(self, key, num_azs: int):
+        import jax
+        import jax.numpy as jnp
+        if not self.has_brownouts:
+            s = jnp.full((num_azs, 1), jnp.inf)
+            return s, s
+        n = 1 if self.correlated else num_azs
+        ku, kd = jax.random.split(key)
+        up = jax.random.exponential(
+            ku, (n, self.max_intervals)) * self.az_mtbf_ms
+        down = jax.random.exponential(
+            kd, (n, self.max_intervals)) * self.az_mttr_ms
+        ends = jnp.cumsum(up + down, axis=1)
+        starts = ends - down
+        if self.correlated:
+            starts = jnp.broadcast_to(starts,
+                                      (num_azs, self.max_intervals))
+            ends = jnp.broadcast_to(ends, (num_azs, self.max_intervals))
+        return starts, ends
+
+    def crash_tables(self, key, num_workers: int):
+        import jax
+        import jax.numpy as jnp
+        if not self.has_crashes:
+            s = jnp.full((num_workers, 1), jnp.inf)
+            return s, s
+        gaps = jax.random.exponential(
+            key, (num_workers, self.max_crashes)) * self.crash_mtbf_ms
+        ends = jnp.cumsum(gaps + self.crash_restart_ms, axis=1)
+        return ends - self.crash_restart_ms, ends
+
+
+#: healthy cluster — the engines' static no-op (compiles to the pre-fault
+#: code paths bit-for-bit)
+NO_FAULTS = FaultProfile()
+
+
+# --------------------------------------------------------------------------
+# interval helpers — batched jnp forms (vector scan bodies)
+# --------------------------------------------------------------------------
+# ``starts``/``ends`` are sorted disjoint interval tables with one trailing
+# axis; the query time broadcasts against every leading axis.  All three
+# are pure elementwise/reduction arithmetic, so they preserve the blocked
+# substrate's determinism-in-(wf, exogenous-tables) contract.
+
+def interval_active(t, starts, ends):
+    """True where ``t`` falls inside an interval ([start, end))."""
+    import jax.numpy as jnp
+    return jnp.any((t[..., None] >= starts) & (t[..., None] < ends),
+                   axis=-1)
+
+
+def push_out(t, starts, ends):
+    """Earliest time >= ``t`` outside every interval.  One pass suffices:
+    the intervals are disjoint, and an interval's end never lands inside a
+    later interval (gaps are a.s. positive)."""
+    import jax.numpy as jnp
+    hit = (t[..., None] >= starts) & (t[..., None] < ends)
+    bump = jnp.max(jnp.where(hit, ends, -jnp.inf), axis=-1)
+    return jnp.maximum(t, bump)
+
+
+def first_start_in(s, e, starts):
+    """Earliest interval start strictly inside (s, e); inf when none.
+    (The crash-kill query: an attempt running over a crash start dies
+    there.  ``s`` itself is never inside an outage — bookings are pushed
+    out first — so strict comparison is exact.)"""
+    import jax.numpy as jnp
+    cand = jnp.where((starts > s[..., None]) & (starts < e[..., None]),
+                     starts, jnp.inf)
+    return jnp.min(cand, axis=-1)
+
+
+# --------------------------------------------------------------------------
+# interval helpers — scalar numpy forms (the event-driven oracle)
+# --------------------------------------------------------------------------
+
+def interval_active_np(t: float, starts, ends) -> bool:
+    return bool(np.any((t >= starts) & (t < ends)))
+
+
+def push_out_np(t: float, starts, ends) -> float:
+    hit = (t >= starts) & (t < ends)
+    if hit.any():
+        return float(ends[hit].max())
+    return float(t)
+
+
+def first_start_in_np(s: float, e: float, starts) -> float:
+    inside = starts[(starts > s) & (starts < e)]
+    return float(inside.min()) if inside.size else math.inf

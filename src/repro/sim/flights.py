@@ -32,12 +32,16 @@ agreement tests compare like with like — see sim/vector_queue.py):
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List
+from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
 from repro.sim.cluster import Cluster
 from repro.sim.events import EventQueue
+from repro.sim.faults import FaultProfile, interval_active_np
+from repro.sim.policies import (NO_RECOVERY, RecoveryPolicy,
+                                attempt_outcome_np, fold_chain_np,
+                                push_out_np)
 
 
 @dataclasses.dataclass
@@ -56,6 +60,11 @@ class SimWorkload:
     # stock functions are self-contained, e.g. thumbnail re-downloads)
     stock_tasks: List[str] = None
     stock_deps: Dict[str, tuple] = None
+    # fault environment + recovery policy carried with the workload so a
+    # scalar/vector pair built from the same object injects identically
+    # (sim/faults.py, sim/policies.py); constructor kwargs override
+    faults: Optional[FaultProfile] = None
+    recovery: Optional[RecoveryPolicy] = None
 
     @property
     def stock_task_list(self):
@@ -82,7 +91,9 @@ class FlightSim:
     def __init__(self, cluster: Cluster, wl: SimWorkload, *, raptor: bool,
                  arrival_rate_hz: float, duration_s: float = 1800.0,
                  load: str = "medium", stream_latency_ms: float = 0.5,
-                 seed: int = 0, rotate: bool = True):
+                 seed: int = 0, rotate: bool = True,
+                 faults: FaultProfile = None,
+                 recovery: RecoveryPolicy = None):
         """rotate=True (default) uses the paper's §3.3.3 cyclic-shift
         sequences — essential for parallelizable DAGs (racing one shared
         order serialises them).  rotate=False has all members race the same
@@ -102,6 +113,26 @@ class FlightSim:
         self.jobs: List[JobRecord] = []
         n_seq = max(wl.concurrency, 1) if rotate else 1
         self._seqs = [self._exec_sequence(i) for i in range(n_seq)]
+        # fault environment + recovery policy (sim/faults.py, sim/
+        # policies.py): explicit kwargs win, else whatever the workload
+        # carries.  Tables come from a dedicated rng stream so enabling
+        # faults does not perturb the service/arrival draws.
+        fp = faults if faults is not None else wl.faults
+        self.fp = fp if (fp is not None and fp.enabled) else None
+        pol = recovery if recovery is not None else wl.recovery
+        self.policy = pol if pol is not None else NO_RECOVERY
+        self.fault_mode = self.fp is not None or not self.policy.is_default
+        frng = np.random.default_rng(seed + 7919)
+        if self.fp is not None:
+            self._bs, self._be = self.fp.brownout_tables_np(
+                frng, cluster.num_azs)
+            self._cs, self._ce = self.fp.crash_tables_np(
+                frng, cluster.num_workers)
+        else:                         # policy-only mode: healthy sentinels
+            self._bs = np.full((cluster.num_azs, 1), np.inf)
+            self._be = self._bs
+            self._cs = np.full((cluster.num_workers, 1), np.inf)
+            self._ce = self._cs
 
     # ------------------------------------------------------------------
     def run(self) -> List[JobRecord]:
@@ -151,6 +182,12 @@ class FlightSim:
         else:
             state = {"rec": rec, "done": set(), "queued": set(),
                      "draws": draws}
+            if self.fault_mode:
+                # per-task attempt bookkeeping: the service draw shared by
+                # the whole attempt set (deterministic re-execution — see
+                # sim/policies.py), attempts committed-but-unfinished, and
+                # which finalized tasks actually succeeded
+                state.update(zbase={}, att_open={}, succ=set())
             self._stock_enqueue_ready(state, overhead)
 
     def _ready(self, done: set) -> List[str]:
@@ -164,11 +201,13 @@ class FlightSim:
         for task in self._ready(state["done"]):
             if task not in state["queued"]:
                 state["queued"].add(task)
+                if self.fault_mode:
+                    state["att_open"][task] = 1
                 self.q.schedule(self.q.now + overhead, self._stock_push,
                                 state, task)
 
-    def _stock_push(self, state, task):
-        self.backlog.append(("task", state["rec"], task, state))
+    def _stock_push(self, state, task, attempt: int = 0):
+        self.backlog.append(("task", state["rec"], task, state, attempt))
         self._dispatch()
 
     # ------------------------------------------------------------------
@@ -176,7 +215,10 @@ class FlightSim:
         while self.backlog and self.free:
             kind = self.backlog[0][0]
             if kind == "task":
-                _, rec, task, state = self.backlog.pop(0)
+                _, rec, task, state, att = self.backlog.pop(0)
+                if self.fault_mode:
+                    self._stock_dispatch_attempt(rec, state, task, att)
+                    continue
                 w = self.free.pop()
                 svc = state["draws"].draw(task, w)
                 fail = self.rng.random() < self.wl.fail_prob
@@ -194,12 +236,95 @@ class FlightSim:
                 self._join_member(fl, w, member_idx, overhead)
 
     def _pick_worker_for(self, fl) -> int:
-        """HA-aware pick: prefer AZs not yet used by this flight."""
+        """HA-aware pick: prefer AZs not yet used by this flight; with
+        faults active, health trumps freshness (skip browned-out AZs,
+        degrading gracefully — a fully-degraded pool still places).
+        Uniform within the best tier, like the vector engine's
+        ``prio + 2*healthy + fresh`` placement key."""
         used_azs = {int(self.cl.az_of[w]) for w in fl["members"]}
-        fresh = [w for w in self.free
-                 if int(self.cl.az_of[w]) not in used_azs]
-        pool = fresh if fresh else list(self.free)
+
+        def tier(w: int) -> int:
+            az = int(self.cl.az_of[w])
+            fresh = az not in used_azs
+            if not self.fault_mode:
+                return int(fresh)
+            healthy = not interval_active_np(
+                self.q.now, self._bs[az], self._be[az])
+            return 2 * int(healthy) + int(fresh)
+
+        best = max(tier(w) for w in self.free)
+        pool = [w for w in self.free if tier(w) == best]
         return pool[int(self.rng.integers(len(pool)))]
+
+    # ------------------------------------------------------------------
+    # stock OpenWhisk fork-join, fault/policy path: every attempt is its
+    # own dispatch; a failed attempt requeues up to the retry budget, a
+    # slow primary gets a hedged duplicate (no cancellation — first
+    # success wins, losers run to completion).  Mirrors the vector
+    # engine's attempt-expanded event stream (sim/vector_queue.py).
+    def _stock_dispatch_attempt(self, rec, state, task, att):
+        now = self.q.now
+        # earliest pushed start among FREE workers; healthy AZ, then the
+        # lowest index break ties (the vector body's deterministic order)
+        best = None
+        for w in sorted(self.free):
+            az = int(self.cl.az_of[w])
+            s = push_out_np(now, self._cs[w], self._ce[w])
+            key = (s, interval_active_np(s, self._bs[az], self._be[az]), w)
+            if best is None or key < best[0]:
+                best = (key, w, az)
+        _, w, az = best
+        self.free.discard(w)
+        z = state["zbase"].get(task)
+        if z is None:
+            z = state["zbase"][task] = state["draws"].draw(task, w)
+        s, end, fail = attempt_outcome_np(
+            now, z, float(self.rng.random()),
+            self._bs[az], self._be[az], self._cs[w], self._ce[w],
+            policy=self.policy, faults=self.fp,
+            base_fail=self.wl.fail_prob)
+        self.q.schedule(end, self._stock_attempt_finish,
+                        rec, state, task, w, fail, att, now)
+        # hedge commit: the primary's outcome is already determined, so
+        # the "still running at start + hedge_ms" test is exact here and
+        # matches the vector's ready_hedge = start0 + hedge_ms gate
+        if (att == 0 and self.policy.has_hedge
+                and end > s + self.policy.hedge_ms):
+            state["att_open"][task] += 1
+            self.q.schedule(s + self.policy.hedge_ms, self._stock_push,
+                            state, task, self.policy.chain_attempts)
+
+    def _stock_attempt_finish(self, rec, state, task, w, fail, att, t_disp):
+        self.free.add(w)
+        rec.work_ms += self.q.now - t_disp
+        # chain continues regardless of other attempts (no cancellation);
+        # the hedge slot (att == chain_attempts) never retries
+        if fail and att < self.policy.max_retries:
+            state["att_open"][task] += 1
+            delay = self.policy.backoff(att, float(self.rng.random()))
+            self.q.schedule(self.q.now + delay, self._stock_push,
+                            state, task, att + 1)
+        state["att_open"][task] -= 1
+        if task not in state["done"]:
+            if not fail:
+                # first success finalizes the task (min successful finish)
+                state["done"].add(task)
+                state["succ"].add(task)
+                self._stock_task_final(rec, state)
+            elif state["att_open"][task] == 0:
+                # every attempt exhausted: the task completes FAILED at its
+                # last attempt's finish so the stage still progresses
+                state["done"].add(task)
+                rec.ok = False
+                self._stock_task_final(rec, state)
+        self._dispatch()
+
+    def _stock_task_final(self, rec, state):
+        oh = self.wl.stock_stage_overhead + float(
+            self.cl.sample_overhead(self.load, 1)[0])
+        self._stock_enqueue_ready(state, oh)
+        if len(state["done"]) == len(self.wl.stock_task_list):
+            rec.t_done = self.q.now
 
     # ------------------------------------------------------------------
     # stock OpenWhisk fork-join
@@ -243,7 +368,15 @@ class FlightSim:
         errored would wait forever and the event queue would never drain —
         the job could not even be *observed* as censored.)  Subsumes the
         old every-member-exhausted check: that is the ``parked``-empty
-        special case."""
+        special case.
+
+        Retry-budget accounting: an "attempt" here is a whole folded
+        timeout/retry chain (``_member_next``), so under an active
+        ``RecoveryPolicy`` a member counts as exhausted on a task only
+        after ``1 + max_retries`` tries — the flight is dead only when
+        every dependency attempt is exhausted under the policy, never on
+        the first full-member failure.  ``core.scheduler`` mirrors this
+        in its ``dead_after`` fail-fast threshold."""
         if (fl["rec"].t_done < 0 and not fl["running"]
                 and fl["pending"] == 0
                 and fl["n_members"] >= max(self.wl.concurrency, 1)
@@ -295,10 +428,26 @@ class FlightSim:
             return
         task = seq[ptr]
         svc = fl["draws"].draw(task, w)
-        fail = self.rng.random() < self.wl.fail_prob
-        eid = self.q.schedule(
-            self.q.now + svc + self.wl.raptor_stage_overhead,
-            self._member_finish, fl, w, task, fail, self.q.now)
+        if self.fault_mode:
+            # the whole timeout/retry/backoff chain folds into ONE event
+            # (sim/policies.py): the member holds its worker and stays in
+            # ``running`` for the chain's full span, so a peer's success
+            # broadcast preempts the chain as a unit and a member
+            # exhausts a task only after the full retry budget — the
+            # deadlock/dead_after accounting below inherits the budget
+            az = int(self.cl.az_of[w])
+            t_end, fail = fold_chain_np(
+                self.q.now, svc + self.wl.raptor_stage_overhead,
+                self.rng, self._bs[az], self._be[az],
+                self._cs[w], self._ce[w], policy=self.policy,
+                faults=self.fp, base_fail=self.wl.fail_prob)
+            eid = self.q.schedule(
+                t_end, self._member_finish, fl, w, task, fail, self.q.now)
+        else:
+            fail = self.rng.random() < self.wl.fail_prob
+            eid = self.q.schedule(
+                self.q.now + svc + self.wl.raptor_stage_overhead,
+                self._member_finish, fl, w, task, fail, self.q.now)
         fl["running"][w] = (task, eid, self.q.now)
 
     def _member_finish(self, fl, w, task, fail, t0):

@@ -1,0 +1,225 @@
+"""Attempt-level recovery policy: timeout, bounded retry, hedging.
+
+Raptor's F x K racing is one point in the recovery design space — a hedge
+issued at latency threshold 0 with a budget of F copies.  ``RecoveryPolicy``
+names the rest of the space declaratively so BOTH engines (and the live
+``core.scheduler`` flight) consume the same knobs:
+
+* ``timeout_ms`` — an attempt running longer than this fails at the
+  timeout (the cap applies to the attempt's busy time, service plus the
+  per-attempt stage hop);
+* ``max_retries``/``backoff_ms``/``backoff_jitter`` — a failed attempt is
+  retried on the SAME worker after ``backoff_ms * 2**r * (1 + jitter*U)``;
+  the whole chain counts as one racing attempt (a member exhausts a task
+  only after the full budget — the ``dead_after`` accounting in
+  ``sim/flights.py`` and ``core/scheduler.py`` respects this);
+* ``hedge_ms`` — stock engine only: if the primary attempt is still
+  running ``hedge_ms`` after it started, a duplicate is enqueued on
+  another worker (no cancellation: both run to completion, first success
+  wins — racing IS this knob at 0 with budget F, so the raptor engines
+  ignore it).
+
+Semantics shared by the scalar oracle and the vector engines (agreement
+tests compare like with like):
+
+* **deterministic re-execution**: the service time is a property of the
+  invocation, so retried/hedged attempts reuse the SAME service draw.
+  Retries still help because the *environment* changes between attempts —
+  the brownout state at the new start time, crash avoidance, queue timing;
+* per-attempt error uniforms are redrawn (transient errors);
+* intermediate chain failures broadcast nothing (paper §3.3.4 — only the
+  chain's final outcome is visible to peers).
+
+The chain fold below turns a whole timeout/retry/backoff chain into ONE
+(end, failed) pair computed at scheduling time.  That keeps the vector
+race's one-event-per-(member, task) structure — the tight event budgets
+survive policy injection — and the scalar oracle folds the identical
+arithmetic, so the two stay distributionally in lockstep.  The two
+implementations (batched jnp / scalar np) must not drift apart.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.sim.faults import (FaultProfile, first_start_in, first_start_in_np,
+                              interval_active, interval_active_np, push_out,
+                              push_out_np)
+
+
+@dataclasses.dataclass(frozen=True)
+class RecoveryPolicy:
+    timeout_ms: float = math.inf
+    max_retries: int = 0
+    backoff_ms: float = 0.0
+    backoff_jitter: float = 0.0    # multiplicative U[1, 1+jitter) on backoff
+    hedge_ms: float = math.inf     # stock only; raptor racing = hedge-at-0
+
+    @property
+    def is_default(self) -> bool:
+        return (math.isinf(self.timeout_ms) and self.max_retries == 0
+                and math.isinf(self.hedge_ms))
+
+    @property
+    def has_hedge(self) -> bool:
+        return math.isfinite(self.hedge_ms)
+
+    @property
+    def chain_attempts(self) -> int:
+        """Attempts in one retry chain (primary + retries)."""
+        return 1 + self.max_retries
+
+    @property
+    def stock_attempts(self) -> int:
+        """Attempt slots per stock task: the chain plus the hedge copy."""
+        return self.chain_attempts + (1 if self.has_hedge else 0)
+
+    def backoff(self, r: int, u: float) -> float:
+        """Backoff before retry ``r+1`` (exponential, jittered)."""
+        return self.backoff_ms * (2.0 ** r) * (1.0 + self.backoff_jitter * u)
+
+
+#: the no-op policy — engines compile to their pre-policy paths
+NO_RECOVERY = RecoveryPolicy()
+
+
+def can_fail(base_fail: float, faults: FaultProfile | None,
+             policy: RecoveryPolicy | None) -> bool:
+    """Static: can ANY attempt outcome be a failure?  Gates the race event
+    budgets, the closed forms, and the error-uniform draws."""
+    if base_fail > 0.0:
+        return True
+    if policy is not None and math.isfinite(policy.timeout_ms):
+        return True
+    if faults is not None and faults.enabled:
+        if faults.degraded_fail_prob > 0.0 or faults.has_crashes:
+            return True
+    return False
+
+
+# --------------------------------------------------------------------------
+# attempt arithmetic — one attempt, then the folded chain
+# --------------------------------------------------------------------------
+# An attempt asked to start at t on worker w in AZ a:
+#   s       = push_out(t, crash outages of w)        (never start in one)
+#   deg     = AZ a degraded at s
+#   zi      = z * (inflation if deg else 1)
+#   dur     = min(zi, timeout);  timeout-fail iff zi > timeout
+#   p       = degraded_fail_prob if deg else base_fail;  error iff U < p
+#   crash   = first crash start in (s, s+dur) kills the attempt there
+#   end     = crash time if crashed else s + dur
+# The chain runs attempts until one succeeds or the budget is spent; the
+# next attempt starts at end + backoff(r).
+
+def fold_chain(t0, z, u_err, u_jit, bs, be, cs, ce, *,
+               policy: RecoveryPolicy, faults: FaultProfile | None,
+               base_fail: float):
+    """Batched jnp chain fold.
+
+    ``t0``/``z``: (...,) requested start and base attempt duration;
+    ``u_err``: (..., R+1) per-attempt error uniforms; ``u_jit``: (..., R)
+    backoff jitter uniforms; ``bs``/``be``: (..., I) brownout tables of
+    each lane's AZ; ``cs``/``ce``: (..., C) crash tables of its worker.
+    Returns (end, failed) — the chain's completion time and final outcome.
+    Statically unrolled over the retry budget (R is tiny).
+    """
+    import jax.numpy as jnp
+    infl = faults.degraded_inflation if faults is not None else 1.0
+    pdeg = (faults.degraded_fail_prob if faults is not None else base_fail)
+    end = jnp.zeros_like(t0)
+    failed = jnp.ones(t0.shape, dtype=bool)
+    settled = jnp.zeros(t0.shape, dtype=bool)
+    t = t0
+    for r in range(policy.max_retries + 1):
+        s = push_out(t, cs, ce)
+        deg = interval_active(s, bs, be)
+        zi = z * jnp.where(deg, infl, 1.0)
+        dur = jnp.minimum(zi, policy.timeout_ms)
+        p = jnp.where(deg, pdeg, base_fail)
+        a_fail = (u_err[..., r] < p) | (zi > policy.timeout_ms)
+        c1 = first_start_in(s, s + dur, cs)
+        crashed = c1 < s + dur
+        a_end = jnp.where(crashed, c1, s + dur)
+        a_fail = a_fail | crashed
+        end = jnp.where(settled, end, a_end)
+        failed = jnp.where(settled, failed, a_fail)
+        settled = settled | ~a_fail
+        if r < policy.max_retries:
+            t = a_end + policy.backoff_ms * (2.0 ** r) * (
+                1.0 + policy.backoff_jitter * u_jit[..., r])
+    return end, failed
+
+
+def chain_transform(z, u_err, u_jit, deg, *, policy: RecoveryPolicy,
+                    faults: FaultProfile | None, base_fail: float):
+    """Open-loop chain fold — the zero-queueing limit of
+    :func:`fold_chain`.
+
+    The open-loop tier (:mod:`repro.sim.vector`) has no absolute clock:
+    one trial is one invocation on an idle cluster, so the brownout state
+    is a stationary snapshot frozen for the invocation (``deg``, drawn at
+    ``FaultProfile.stationary_degraded``) and crash processes — which
+    need wall-clock booking times — do not apply, nor does hedging
+    (a hedge needs the booking time of the primary; closed-loop only).
+    With the AZ state frozen and the service draw reused (deterministic
+    re-execution), an attempt's duration and timeout outcome repeat
+    exactly, so the chain reduces to a *draw transform*: total busy time
+    = attempt durations + backoffs while failing, final outcome = every
+    attempt errored (errors re-roll per attempt).
+
+    ``z``: (...,) base durations; ``u_err``: (..., R+1); ``u_jit``:
+    (..., R); ``deg``: (...,) bool.  Returns (duration, failed).
+    """
+    import jax.numpy as jnp
+    infl = faults.degraded_inflation if faults is not None else 1.0
+    pdeg = (faults.degraded_fail_prob if faults is not None else base_fail)
+    zi = z * jnp.where(deg, infl, 1.0)
+    dur1 = jnp.minimum(zi, policy.timeout_ms)
+    tfail = zi > policy.timeout_ms
+    p = jnp.where(deg, pdeg, base_fail)
+    failed = (u_err[..., 0] < p) | tfail
+    total = dur1
+    for r in range(1, policy.max_retries + 1):
+        a_fail = (u_err[..., r] < p) | tfail
+        back = policy.backoff_ms * (2.0 ** (r - 1)) * (
+            1.0 + policy.backoff_jitter * u_jit[..., r - 1])
+        total = jnp.where(failed, total + back + dur1, total)
+        failed = failed & a_fail
+    return total, failed
+
+
+def attempt_outcome_np(t: float, z: float, u_err: float, deg_bs, deg_be,
+                       cs, ce, *, policy: RecoveryPolicy,
+                       faults: FaultProfile | None, base_fail: float):
+    """One scalar attempt: returns (start, end, failed)."""
+    s = push_out_np(t, cs, ce)
+    deg = (faults is not None and interval_active_np(s, deg_bs, deg_be))
+    zi = z * (faults.degraded_inflation if deg else 1.0) \
+        if faults is not None else z
+    dur = min(zi, policy.timeout_ms)
+    p = ((faults.degraded_fail_prob if deg else base_fail)
+         if faults is not None else base_fail)
+    a_fail = (u_err < p) or (zi > policy.timeout_ms)
+    c1 = first_start_in_np(s, s + dur, cs)
+    crashed = c1 < s + dur
+    end = c1 if crashed else s + dur
+    return s, end, (a_fail or crashed)
+
+
+def fold_chain_np(t0: float, z: float, rng, deg_bs, deg_be, cs, ce, *,
+                  policy: RecoveryPolicy, faults: FaultProfile | None,
+                  base_fail: float):
+    """Scalar chain fold — the oracle's twin of :func:`fold_chain`.
+    Draws the per-attempt error/jitter uniforms from ``rng`` (the vector
+    engines pre-draw theirs; both are i.i.d. per attempt)."""
+    t = float(t0)
+    end, a_fail = t, True
+    for r in range(policy.max_retries + 1):
+        _, end, a_fail = attempt_outcome_np(
+            t, z, float(rng.random()), deg_bs, deg_be, cs, ce,
+            policy=policy, faults=faults, base_fail=base_fail)
+        if not a_fail:
+            return end, False
+        if r < policy.max_retries:
+            t = end + policy.backoff(r, float(rng.random()))
+    return end, True

@@ -211,7 +211,8 @@ class SweepPlan:
 # --------------------------------------------------------------------------
 
 @functools.lru_cache(maxsize=None)
-def _open_raptor_core(trials, f_pad, num_tasks, a_pad, dist, fail_prob):
+def _open_raptor_core(trials, f_pad, num_tasks, a_pad, dist, fail_prob,
+                      faults, policy):
     def core(key, cfg, shared):
         flight, num_azs, rho, oh_mu, oh_sigma = cfg
         mean, offset, cv, stage_oh, slat = shared
@@ -219,18 +220,19 @@ def _open_raptor_core(trials, f_pad, num_tasks, a_pad, dist, fail_prob):
             key, flight, num_azs, rho, mean, offset, cv, stage_oh, slat,
             oh_mu, oh_sigma, trials=trials, flight_max=f_pad,
             num_tasks=num_tasks, azs_max=a_pad, dist=dist,
-            fail_prob=fail_prob)
+            fail_prob=fail_prob, faults=faults, policy=policy)
     return core
 
 
 @functools.lru_cache(maxsize=None)
-def _open_stock_core(trials, num_tasks, dist, fail_prob):
+def _open_stock_core(trials, num_tasks, dist, fail_prob, faults, policy):
     def core(key, cfg, shared):
         rho, oh_mu, oh_sigma = cfg
         mean, offset, cv = shared
         return _stock_sweep_core(
             key, rho, mean, offset, cv, oh_mu, oh_sigma, trials=trials,
-            num_tasks=num_tasks, dist=dist, fail_prob=fail_prob)
+            num_tasks=num_tasks, dist=dist, fail_prob=fail_prob,
+            faults=faults, policy=policy)
     return core
 
 
@@ -258,7 +260,8 @@ def open_loop_pair_plan(wl: VectorWorkload, configs, *, trials: int = 20_000,
         tasks.append(SweepTask(
             "raptor", tuple(idxs),
             _open_raptor_core(int(trials), f_pad, wl.num_tasks, a_pad,
-                              wl.dist, wl.fail_prob),
+                              wl.dist, wl.fail_prob, wl.faults,
+                              wl.recovery),
             jax.random.PRNGKey(seed * 2 + 1),
             (jnp.array([c["flight"] for c in sub]),
              jnp.array([c["num_azs"] for c in sub]),
@@ -268,7 +271,8 @@ def open_loop_pair_plan(wl: VectorWorkload, configs, *, trials: int = 20_000,
             (wl.mean_ms, wl.offset_ms, wl.cv, wl.stage_overhead_ms, 0.5)))
     tasks.append(SweepTask(
         "stock", tuple(range(len(cfgs))),
-        _open_stock_core(int(trials), wl.num_tasks, wl.dist, wl.fail_prob),
+        _open_stock_core(int(trials), wl.num_tasks, wl.dist, wl.fail_prob,
+                         wl.faults, wl.recovery),
         jax.random.PRNGKey(seed * 2),
         (jnp.array([c["rho"] for c in cfgs]),
          jnp.array([oh_of(c)[0] for c in cfgs]),
@@ -299,11 +303,13 @@ def open_loop_pair_plan(wl: VectorWorkload, configs, *, trials: int = 20_000,
 
 @functools.lru_cache(maxsize=None)
 def _queue_raptor_core(jobs, W, A, F, K, seq_t, dep_t, dist, fail_prob,
-                       block, resolver, scan, summary_backend):
+                       faults, policy, block, resolver, scan,
+                       summary_backend):
     from repro.core.analytics import summarize_masked_batch
     from repro.sim.vector_queue import _raptor_trial_fn
     trial = _raptor_trial_fn(jobs, W, A, F, K, seq_t, dep_t, dist, fail_prob,
-                             block, resolver, scan, summary_backend)
+                             faults, policy, block, resolver, scan,
+                             summary_backend)
 
     def core(keys, cfg, shared):
         rate, oh_mu, oh_sigma = cfg
@@ -316,13 +322,14 @@ def _queue_raptor_core(jobs, W, A, F, K, seq_t, dep_t, dist, fail_prob,
 
 
 @functools.lru_cache(maxsize=None)
-def _queue_stock_core(jobs, W, K, dep_t, dist, fail_prob, passes,
-                      has_extras, block, backend, scan, summary_backend):
+def _queue_stock_core(jobs, W, A, K, dep_t, dist, fail_prob, faults,
+                      policy, passes, has_extras, block, backend,
+                      resolver, scan, summary_backend):
     from repro.core.analytics import summarize_masked_batch
     from repro.sim.vector_queue import _stock_trial_fn
-    trial = _stock_trial_fn(jobs, W, K, dep_t, dist, fail_prob, passes,
-                            has_extras, block, backend, scan,
-                            summary_backend)
+    trial = _stock_trial_fn(jobs, W, A, K, dep_t, dist, fail_prob,
+                            faults, policy, passes, has_extras, block,
+                            backend, resolver, scan, summary_backend)
 
     def core(keys, cfg, shared):
         rate, oh_mu, oh_sigma = cfg
@@ -348,15 +355,21 @@ def queue_pair_plan(sims, jobs: int, trials: int) -> SweepPlan:
     the bucket's compiled core."""
     s0 = sims[0]
     r_blk, r_res, r_scan = s0.engine_config("raptor")
-    s_blk, _, s_scan = s0.engine_config("stock")
+    s_blk, s_res, s_scan = s0.engine_config("stock")
     for s in sims[1:]:
         if (s.engine_config("raptor") != (r_blk, r_res, r_scan)
-                or s.engine_config("stock")[::2] != (s_blk, s_scan)
+                or s.engine_config("stock") != (s_blk, s_res, s_scan)
                 or s.booking_backend != s0.booking_backend
                 or s.summary_backend != s0.summary_backend):
             raise ValueError("sims in one queue plan must share the "
                              "substrate (block, resolver, scan, backend) "
                              "config — it is part of the bucket key")
+        if s._fp != s0._fp or s._policy != s0._policy:
+            # the fault environment and recovery policy are statics of
+            # the compiled cores, so they join the bucket key too
+            raise ValueError("sims in one queue plan must share the "
+                             "fault profile and recovery policy — they "
+                             "are statics of the bucket's compiled core")
     rates = jnp.array([s.rate_hz for s in sims])
     mus = jnp.array([s.oh_mu for s in sims])
     sigmas = jnp.array([s.oh_sigma for s in sims])
@@ -369,8 +382,8 @@ def queue_pair_plan(sims, jobs: int, trials: int) -> SweepPlan:
                 int(jobs), s0.W, s0.A, s0.flight, len(wl.tasks),
                 tuple(map(tuple, s0._seq.tolist())),
                 tuple(map(tuple, s0._dep.tolist())),
-                wl.dist, wl.fail_prob, r_blk, r_res, r_scan,
-                s0.summary_backend),
+                wl.dist, wl.fail_prob, s0._fp, s0._policy,
+                r_blk, r_res, r_scan, s0.summary_backend),
             s0._keys(trials, True),
             (rates, mus, sigmas),
             (s0.rho, jnp.asarray(wl.task_means, dtype=jnp.float32),
@@ -378,11 +391,11 @@ def queue_pair_plan(sims, jobs: int, trials: int) -> SweepPlan:
         SweepTask(
             "stock", all_idx,
             _queue_stock_core(
-                int(jobs), s0.W, len(s0._smeans),
+                int(jobs), s0.W, s0.A, len(s0._smeans),
                 tuple(map(tuple, s0._sdep.tolist())),
-                wl.dist, wl.fail_prob, s0._spasses,
+                wl.dist, wl.fail_prob, s0._fp, s0._policy, s0._spasses,
                 bool(s0._sextras.any()), s_blk, s0.booking_backend,
-                s_scan, s0.summary_backend),
+                s_res, s_scan, s0.summary_backend),
             s0._keys(trials, False),
             (rates, mus, sigmas),
             (s0.rho, jnp.asarray(s0._smeans), jnp.asarray(s0._sextras),

@@ -54,6 +54,9 @@ from jax import lax
 from repro.core.analytics import (flight_fail_rate_batch,
                                   forkjoin_fail_rate_batch, summarize_batch)
 from repro.sim.cluster import OverheadModel, lognormal_params
+from repro.sim.faults import FaultProfile
+from repro.sim.policies import (NO_RECOVERY, RecoveryPolicy, can_fail,
+                                chain_transform)
 from repro.sim.workloads import (KEYGEN_CV, KEYGEN_MEAN_MS, KEYGEN_OFFSET_MS,
                                  RELIABILITY_CV, RELIABILITY_MEAN_MS)
 
@@ -69,26 +72,48 @@ class VectorWorkload:
     cv: float = 1.0
     fail_prob: float = 0.0
     stage_overhead_ms: float = 0.5   # raptor stream hop per attempt
+    # fault environment + recovery policy (frozen/hashable -> jit statics
+    # and sweep bucket keys).  The open-loop tier models brownouts as a
+    # stationary per-invocation snapshot and timeout/retry chains as a
+    # draw transform (sim/policies.chain_transform); crash and hedge
+    # semantics need wall-clock booking times -> closed-loop tier only
+    faults: FaultProfile = None
+    recovery: RecoveryPolicy = None
 
 
-def keygen_vector(fail_prob: float = 0.0) -> VectorWorkload:
+def keygen_vector(fail_prob: float = 0.0, faults: FaultProfile = None,
+                  recovery: RecoveryPolicy = None) -> VectorWorkload:
     """ssh-keygen: two entropy-bound tasks, flight of 2 (Tables 7/8)."""
     return VectorWorkload("ssh-keygen", 2, KEYGEN_MEAN_MS, KEYGEN_OFFSET_MS,
-                          "lognorm", KEYGEN_CV, fail_prob)
+                          "lognorm", KEYGEN_CV, fail_prob,
+                          faults=faults, recovery=recovery)
 
 
 def exponential_vector(num_tasks: int = 2, mean_ms: float = 1000.0,
-                       fail_prob: float = 0.0) -> VectorWorkload:
+                       fail_prob: float = 0.0, faults: FaultProfile = None,
+                       recovery: RecoveryPolicy = None) -> VectorWorkload:
     """Pure exp(mu) tasks — the §4.2.1 theory's exact hypothesis, used to
     show the mutually-independent-exponential prediction emerge with scale."""
     return VectorWorkload(f"exp{num_tasks}", num_tasks, mean_ms, 0.0, "exp",
-                          1.0, fail_prob)
+                          1.0, fail_prob, faults=faults, recovery=recovery)
 
 
-def reliability_vector(n_tasks: int, fail_prob: float) -> VectorWorkload:
+def reliability_vector(n_tasks: int, fail_prob: float,
+                       faults: FaultProfile = None,
+                       recovery: RecoveryPolicy = None) -> VectorWorkload:
     """Figure 8's N parallel ~100ms busy-waits with injected task errors."""
     return VectorWorkload(f"busy{n_tasks}", n_tasks, RELIABILITY_MEAN_MS,
-                          0.0, "lognorm", RELIABILITY_CV, fail_prob)
+                          0.0, "lognorm", RELIABILITY_CV, fail_prob,
+                          faults=faults, recovery=recovery)
+
+
+def _stationary_deg(key, trials: int, num_azs: int, fp: FaultProfile):
+    """(trials, A) stationary brownout snapshot; ``correlated`` draws ONE
+    process and broadcasts it — the whole cluster degrades together."""
+    pi = fp.stationary_degraded
+    n = 1 if fp.correlated else num_azs
+    d = jax.random.bernoulli(key, pi, (trials, n))
+    return jnp.broadcast_to(d, (trials, num_azs)) if fp.correlated else d
 
 
 # --------------------------------------------------------------------------
@@ -208,12 +233,23 @@ def _flight_trial(z_seq, fail_seq, t_join, seq, slat, active=None,
 @functools.partial(
     jax.jit,
     static_argnames=("trials", "flight", "num_tasks", "num_azs", "dist",
-                     "fail_prob", "oh_med", "oh_p90", "sequences"))
+                     "fail_prob", "oh_med", "oh_p90", "sequences",
+                     "faults", "recovery"))
 def _raptor_batch(key, *, trials, flight, num_tasks, num_azs, dist,
                   rho, mean, offset, cv, fail_prob, stage_oh, slat,
-                  oh_med, oh_p90, sequences="cyclic"):
+                  oh_med, oh_p90, sequences="cyclic", faults=None,
+                  recovery=None):
     F, K, A = flight, num_tasks, num_azs
-    if sequences == "random":
+    fault_mode = ((faults is not None and faults.enabled)
+                  or (recovery is not None and not recovery.is_default))
+    pol = recovery if recovery is not None else NO_RECOVERY
+    fp = faults if (faults is not None and faults.enabled) else None
+    if fault_mode:
+        if sequences == "random":
+            k_z, k_f, k_o, k_q, k_d, k_e, k_j = jax.random.split(key, 7)
+        else:
+            k_z, k_f, k_o, k_d, k_e, k_j = jax.random.split(key, 6)
+    elif sequences == "random":
         k_z, k_f, k_o, k_q = jax.random.split(key, 4)
     else:
         k_z, k_f, k_o = jax.random.split(key, 3)
@@ -225,7 +261,20 @@ def _raptor_batch(key, *, trials, flight, num_tasks, num_azs, dist,
     z = rho * s[:, az, :] + (1 - rho) * x + offset + stage_oh
     # fail_prob is static so the p=0 common case folds the whole failure
     # path (and its uniform draw) out of the compiled scan
-    if fail_prob == 0.0:
+    if fault_mode:
+        # stationary brownout snapshot per (trial, AZ) + the open-loop
+        # chain transform: attempt durations inflate while degraded,
+        # timeout/retry chains fold into per-attempt (duration, outcome)
+        deg = (_stationary_deg(k_d, trials, A, fp) if fp is not None
+               else jnp.zeros((trials, A), dtype=bool))
+        deg_m = deg[:, az]                        # (trials, F) via placement
+        R = pol.max_retries
+        u_err = jax.random.uniform(k_e, (trials, F, K, R + 1))
+        u_jit = jax.random.uniform(k_j, (trials, F, K, R))
+        z, fail = chain_transform(z, u_err, u_jit, deg_m[:, :, None],
+                                  policy=pol, faults=fp,
+                                  base_fail=fail_prob)
+    elif fail_prob == 0.0:
         fail = jnp.zeros((trials, F, K), dtype=bool)
     else:
         fail = jax.random.bernoulli(k_f, fail_prob, (trials, F, K))
@@ -235,7 +284,9 @@ def _raptor_batch(key, *, trials, flight, num_tasks, num_azs, dist,
     # control-plane hop (the fork's recursive invocation, §3.3.2)
     t_join = oh0[:, None] + jnp.where(jnp.arange(F) == 0, 0.0, ohm)
     # error-free races complete in exactly K events (see _flight_trial)
-    events = K if fail_prob == 0.0 else F * K
+    anyfail = (can_fail(fail_prob, fp, pol) if fault_mode
+               else fail_prob > 0.0)
+    events = K if not anyfail else F * K
     if sequences == "random":
         # fresh uniform order per (trial, member) — the paper-gap probe for
         # the F >> K plateau (cyclic shifts duplicate orders; see ROADMAP)
@@ -271,14 +322,34 @@ def _stock_service_mix(key, trials, num_tasks, rho, mean, offset, dist, cv):
 
 
 @functools.partial(
-    jax.jit, static_argnames=("trials", "num_tasks", "dist", "fail_prob",
-                              "oh_med", "oh_p90"))
+    jax.jit, static_argnames=("trials", "num_tasks", "num_azs", "dist",
+                              "fail_prob", "oh_med", "oh_p90", "faults",
+                              "recovery"))
 def _stock_batch(key, *, trials, num_tasks, dist, rho, mean, offset, cv,
-                 fail_prob, oh_med, oh_p90):
-    k_z, k_f, k_o = jax.random.split(key, 3)
+                 fail_prob, oh_med, oh_p90, num_azs=3, faults=None,
+                 recovery=None):
+    fault_mode = ((faults is not None and faults.enabled)
+                  or (recovery is not None and not recovery.is_default))
+    pol = recovery if recovery is not None else NO_RECOVERY
+    fp = faults if (faults is not None and faults.enabled) else None
+    if fault_mode:
+        k_z, k_f, k_o, k_d, k_e, k_j = jax.random.split(key, 6)
+    else:
+        k_z, k_f, k_o = jax.random.split(key, 3)
     z = _stock_service_mix(k_z, trials, num_tasks, rho, mean, offset, dist,
                            cv)
-    if fail_prob == 0.0:
+    if fault_mode:
+        # fork-join tasks spread round-robin over the AZs like the scalar
+        # sim's worker pool; each folds its own timeout/retry chain
+        deg = (_stationary_deg(k_d, trials, num_azs, fp) if fp is not None
+               else jnp.zeros((trials, num_azs), dtype=bool))
+        deg_t = deg[:, jnp.arange(num_tasks) % num_azs]
+        R = pol.max_retries
+        u_err = jax.random.uniform(k_e, (trials, num_tasks, R + 1))
+        u_jit = jax.random.uniform(k_j, (trials, num_tasks, R))
+        z, fail = chain_transform(z, u_err, u_jit, deg_t, policy=pol,
+                                  faults=fp, base_fail=fail_prob)
+    elif fail_prob == 0.0:
         fail = jnp.zeros((trials, num_tasks), dtype=bool)
     else:
         fail = jax.random.bernoulli(k_f, fail_prob, (trials, num_tasks))
@@ -301,15 +372,33 @@ def _stock_batch(key, *, trials, num_tasks, dist, rho, mean, offset, cv,
 
 def _raptor_sweep_core(key, flight, num_azs, rho, mean, offset, cv,
                        stage_oh, slat, oh_mu, oh_sigma, *, trials,
-                       flight_max, num_tasks, azs_max, dist, fail_prob):
+                       flight_max, num_tasks, azs_max, dist, fail_prob,
+                       faults=None, policy=None):
     F, K, A = flight_max, num_tasks, azs_max
-    k_z, k_f, k_o = jax.random.split(key, 3)
+    fault_mode = ((faults is not None and faults.enabled)
+                  or (policy is not None and not policy.is_default))
+    pol = policy if policy is not None else NO_RECOVERY
+    fp = faults if (faults is not None and faults.enabled) else None
+    if fault_mode:
+        k_z, k_f, k_o, k_d, k_e, k_j = jax.random.split(key, 6)
+    else:
+        k_z, k_f, k_o = jax.random.split(key, 3)
     active = jnp.arange(F) < flight
     az = jnp.arange(F) % num_azs                  # traced AZ spread
     sx = _service_draws(k_z, (trials, A + F, K), mean, dist, cv)
     s, x = sx[:, :A, :], sx[:, A:, :]
     z = rho * s[:, az, :] + (1 - rho) * x + offset + stage_oh
-    if fail_prob == 0.0:
+    if fault_mode:
+        deg = (_stationary_deg(k_d, trials, A, fp) if fp is not None
+               else jnp.zeros((trials, A), dtype=bool))
+        deg_m = deg[:, az]
+        R = pol.max_retries
+        u_err = jax.random.uniform(k_e, (trials, F, K, R + 1))
+        u_jit = jax.random.uniform(k_j, (trials, F, K, R))
+        z, fail = chain_transform(z, u_err, u_jit, deg_m[:, :, None],
+                                  policy=pol, faults=fp,
+                                  base_fail=fail_prob)
+    elif fail_prob == 0.0:
         fail = jnp.zeros((trials, F, K), dtype=bool)
     else:
         fail = jax.random.bernoulli(k_f, fail_prob, (trials, F, K))
@@ -320,7 +409,9 @@ def _raptor_sweep_core(key, flight, num_azs, rho, mean, offset, cv,
     seq_b = jnp.broadcast_to(seq, (trials, F, K))
     z_seq = jnp.take_along_axis(z, seq_b, axis=2)
     fail_seq = jnp.take_along_axis(fail, seq_b, axis=2)
-    events = K if fail_prob == 0.0 else F * K
+    anyfail = (can_fail(fail_prob, fp, pol) if fault_mode
+               else fail_prob > 0.0)
+    events = K if not anyfail else F * K
     t_resp, ok = jax.vmap(
         lambda zz, ff, tj: _flight_trial(zz, ff, tj, seq, slat, active,
                                          num_events=events))(
@@ -333,11 +424,28 @@ def _raptor_sweep_core(key, flight, num_azs, rho, mean, offset, cv,
 
 
 def _stock_sweep_core(key, rho, mean, offset, cv, oh_mu, oh_sigma, *,
-                      trials, num_tasks, dist, fail_prob):
-    k_z, k_f, k_o = jax.random.split(key, 3)
+                      trials, num_tasks, dist, fail_prob, num_azs=3,
+                      faults=None, policy=None):
+    fault_mode = ((faults is not None and faults.enabled)
+                  or (policy is not None and not policy.is_default))
+    pol = policy if policy is not None else NO_RECOVERY
+    fp = faults if (faults is not None and faults.enabled) else None
+    if fault_mode:
+        k_z, k_f, k_o, k_d, k_e, k_j = jax.random.split(key, 6)
+    else:
+        k_z, k_f, k_o = jax.random.split(key, 3)
     z = _stock_service_mix(k_z, trials, num_tasks, rho, mean, offset, dist,
                            cv)
-    if fail_prob == 0.0:
+    if fault_mode:
+        deg = (_stationary_deg(k_d, trials, num_azs, fp) if fp is not None
+               else jnp.zeros((trials, num_azs), dtype=bool))
+        deg_t = deg[:, jnp.arange(num_tasks) % num_azs]
+        R = pol.max_retries
+        u_err = jax.random.uniform(k_e, (trials, num_tasks, R + 1))
+        u_jit = jax.random.uniform(k_j, (trials, num_tasks, R))
+        z, fail = chain_transform(z, u_err, u_jit, deg_t, policy=pol,
+                                  faults=fp, base_fail=fail_prob)
+    elif fail_prob == 0.0:
         fail = jnp.zeros((trials, num_tasks), dtype=bool)
     else:
         fail = jax.random.bernoulli(k_f, fail_prob, (trials, num_tasks))
@@ -475,14 +583,17 @@ class VectorFlightSim:
                 cv=wl.cv, fail_prob=wl.fail_prob,
                 stage_oh=wl.stage_overhead_ms, slat=self.slat,
                 oh_med=self.oh_med, oh_p90=self.oh_p90,
-                sequences=self.sequences)
+                sequences=self.sequences, faults=wl.faults,
+                recovery=wl.recovery)
         else:
             t, ok, fail = _stock_batch(
                 self._key(False), trials=int(trials),
                 num_tasks=wl.num_tasks, dist=wl.dist, rho=self.rho,
                 mean=wl.mean_ms, offset=wl.offset_ms, cv=wl.cv,
                 fail_prob=wl.fail_prob,
-                oh_med=self.oh_med, oh_p90=self.oh_p90)
+                oh_med=self.oh_med, oh_p90=self.oh_p90,
+                num_azs=self.num_azs, faults=wl.faults,
+                recovery=wl.recovery)
         return VectorResult(t, ok, fail, raptor)
 
     def run_pair(self, trials: int = 10_000) -> Dict[str, dict]:

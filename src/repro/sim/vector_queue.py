@@ -85,6 +85,10 @@ from jax import lax
 
 from repro.core.analytics import summarize_batch
 from repro.sim.cluster import OverheadModel, lognormal_params
+from repro.sim.faults import (FaultProfile, first_start_in, interval_active,
+                              push_out)
+from repro.sim.policies import (NO_RECOVERY, RecoveryPolicy, can_fail,
+                                fold_chain)
 from repro.sim.scan_core import (blocked_bestfit_booking,
                                  blocked_event_replay, stock_booking_fins)
 from repro.sim.vector import unit_draws
@@ -120,6 +124,11 @@ class QueueWorkload:
     stock_stage_ms: float = 0.0             # storage round-trip per stage hop
     fail_prob: float = 0.0
     work_est_ws: float = 2.0
+    # fault environment + recovery policy carried with the workload (both
+    # frozen/hashable, so they ride the static lru keys and the sweep
+    # bucket keys); QueueFlightSim kwargs override
+    faults: FaultProfile = None
+    recovery: RecoveryPolicy = None
 
     def stock_graph(self):
         if self.stock_tasks is None:
@@ -133,26 +142,31 @@ class QueueWorkload:
         return self.stock_extra_means
 
 
-def keygen_queue(fail_prob: float = 0.0) -> QueueWorkload:
+def keygen_queue(fail_prob: float = 0.0, faults: FaultProfile = None,
+                 recovery: RecoveryPolicy = None) -> QueueWorkload:
     """ssh-keygen: two independent entropy-bound tasks, flight of 2."""
     return QueueWorkload(
         "ssh-keygen", ("keygen_a", "keygen_b"),
         (KEYGEN_MEAN_MS, KEYGEN_MEAN_MS), ((), ()), flight=2,
         dist="lognorm", cv=KEYGEN_CV, offset_ms=KEYGEN_OFFSET_MS,
-        fail_prob=fail_prob, work_est_ws=1.9)
+        fail_prob=fail_prob, work_est_ws=1.9,
+        faults=faults, recovery=recovery)
 
 
-def wordcount_queue() -> QueueWorkload:
+def wordcount_queue(fail_prob: float = 0.0, faults: FaultProfile = None,
+                    recovery: RecoveryPolicy = None) -> QueueWorkload:
     """Map-reduce: split -> 4 maps -> reduce; stock pays the S3 hop."""
     tasks = ("split", "map0", "map1", "map2", "map3", "reduce")
     means = (WC_SPLIT_MS,) + (WC_MAP_MS,) * 4 + (WC_REDUCE_MS,)
     deps = ((),) + (("split",),) * 4 + (("map0", "map1", "map2", "map3"),)
     return QueueWorkload("wordcount", tasks, means, deps, flight=2,
                          dist="exp", stock_stage_ms=WC_STORAGE_HOP_MS,
-                         work_est_ws=4.2)
+                         fail_prob=fail_prob, work_est_ws=4.2,
+                         faults=faults, recovery=recovery)
 
 
-def thumbnail_queue() -> QueueWorkload:
+def thumbnail_queue(fail_prob: float = 0.0, faults: FaultProfile = None,
+                    recovery: RecoveryPolicy = None) -> QueueWorkload:
     """Download + 4 resizes; stock functions each re-download the source."""
     thumbs = tuple(f"thumb{i}" for i in range(4))
     return QueueWorkload(
@@ -162,16 +176,21 @@ def thumbnail_queue() -> QueueWorkload:
         dist="lognorm", cv=THUMB_CV,
         stock_tasks=thumbs, stock_means=(THUMB_RESIZE_MS,) * 4,
         stock_extra_means=(THUMB_DOWNLOAD_MS,) * 4,
-        stock_deps=((),) * 4, work_est_ws=5.6)
+        stock_deps=((),) * 4, fail_prob=fail_prob, work_est_ws=5.6,
+        faults=faults, recovery=recovery)
 
 
 def exponential_queue(num_tasks: int = 2, mean_ms: float = 1000.0,
-                      flight: int = 2) -> QueueWorkload:
+                      flight: int = 2, fail_prob: float = 0.0,
+                      faults: FaultProfile = None,
+                      recovery: RecoveryPolicy = None) -> QueueWorkload:
     """Pure exp(mu) independent tasks — the §4.2.1 theory's hypothesis."""
     return QueueWorkload(
         f"exp{num_tasks}", tuple(f"t{i}" for i in range(num_tasks)),
         (mean_ms,) * num_tasks, ((),) * num_tasks, flight=flight,
-        dist="exp", work_est_ws=num_tasks * mean_ms / 1000.0)
+        dist="exp", fail_prob=fail_prob,
+        work_est_ws=num_tasks * mean_ms / 1000.0,
+        faults=faults, recovery=recovery)
 
 
 # --------------------------------------------------------------------------
@@ -220,7 +239,7 @@ def _topo_order(dep_mask: np.ndarray):
 
 def dag_flight_trial(z_seq, fail_seq, t_join, seq, dep_mask, slat,
                      direct_start: bool = False, num_events: int = None,
-                     no_failures: bool = False):
+                     no_failures: bool = False, recovery=None):
     """Replay one flight of a (possibly DAG) manifest.
 
     Like ``sim.vector._flight_trial`` but members must respect ``dep_mask``
@@ -253,8 +272,23 @@ def dag_flight_trial(z_seq, fail_seq, t_join, seq, dep_mask, slat,
     because its task completed (by the member itself, or by the peer
     whose broadcast preempted it), so "attempted by me" implies "done"
     and the head-of-line candidate mask collapses to ``~done[seq]``.
+
+    ``recovery`` (optional) is the fault/policy bundle ``(policy, faults,
+    base_fail, bs, be, cs, ce, u_err, u_jit)``: per-member brownout
+    tables of the PLACED AZ (``bs``/``be``, (F, I)), crash tables of the
+    placed worker ((F, C)), and pre-drawn per-attempt uniforms
+    ((F, K, R+1) errors / (F, K, R) backoff jitter).  Each launch then
+    folds a whole timeout/retry/backoff chain into its ONE race event
+    (``sim.policies.fold_chain``) — retries re-run on the same worker
+    with the same service draw (deterministic re-execution), the member
+    stays busy for the whole chain, and the first-success broadcast
+    preempts a chain as a unit.  ``fail_seq`` is ignored in this mode
+    (errors live in the fold's uniforms).
     """
     F, K = z_seq.shape
+    if recovery is not None:
+        (r_pol, r_fp, r_base_fail, r_bs, r_be, r_cs, r_ce,
+         u_err, u_jit) = recovery
     # dep_mask is a trace-time constant (the manifest), so a dep-free
     # workload statically elides the runnable computation below
     has_deps = bool(np.asarray(dep_mask).any())
@@ -265,8 +299,14 @@ def dag_flight_trial(z_seq, fail_seq, t_join, seq, dep_mask, slat,
     if direct_start:
         attempted0 = jnp.zeros((F, K), dtype=bool).at[:, 0].set(True)
         cur0 = seq[:, 0]
-        curfail0 = fail_seq[:, 0]
-        fin0 = t_join + z_seq[:, 0]
+        if recovery is None:
+            curfail0 = fail_seq[:, 0]
+            fin0 = t_join + z_seq[:, 0]
+        else:
+            fin0, curfail0 = fold_chain(
+                t_join, z_seq[:, 0], u_err[:, 0], u_jit[:, 0],
+                r_bs, r_be, r_cs, r_ce, policy=r_pol, faults=r_fp,
+                base_fail=r_base_fail)
     else:
         attempted0 = jnp.zeros((F, K), dtype=bool)
         cur0 = jnp.full((F,), -1)
@@ -299,14 +339,27 @@ def dag_flight_trial(z_seq, fail_seq, t_join, seq, dep_mask, slat,
         j_hot = k_ar[None, :] == jnp.argmax(cand, axis=1)[:, None]
         nxt = jnp.sum(jnp.where(j_hot, seq, 0), axis=1)
         z_next = jnp.sum(jnp.where(j_hot, z_seq, 0.0), axis=1)
-        f_next = jnp.any(j_hot & fail_seq, axis=1)
         can_start = idle & has_next
         if has_deps:
             can_start &= ~jnp.any(dep_mask[nxt] & ~done2, axis=1)
         # the finisher chains immediately; preempted/woken members restart
         # after the stream half-RTT
         start = jnp.where(e_hot, t, t + slat)
-        fin2 = jnp.where(can_start, start + z_next,
+        if recovery is None:
+            f_next = jnp.any(j_hot & fail_seq, axis=1)
+            fin_try = start + z_next
+        else:
+            # the whole timeout/retry/backoff chain is ONE event on the
+            # member's placed worker; only the chain's final outcome is
+            # visible to peers (§3.3.4)
+            u_e = jnp.sum(jnp.where(j_hot[:, :, None], u_err, 0.0),
+                          axis=1)
+            u_j = jnp.sum(jnp.where(j_hot[:, :, None], u_jit, 0.0),
+                          axis=1)
+            fin_try, f_next = fold_chain(
+                start, z_next, u_e, u_j, r_bs, r_be, r_cs, r_ce,
+                policy=r_pol, faults=r_fp, base_fail=r_base_fail)
+        fin2 = jnp.where(can_start, fin_try,
                          jnp.where(busy_after, fin, jnp.inf))
         cur2 = jnp.where(can_start, nxt, jnp.where(busy_after, cur, -1))
         curfail2 = jnp.where(can_start, f_next,
@@ -411,7 +464,8 @@ def auto_config(engine: str, scan: str = "auto") -> Tuple[int, str, str]:
 @functools.lru_cache(maxsize=None)
 def _raptor_trial_fn(jobs: int, W: int, A: int, F: int, K: int,
                      seq_t: tuple, dep_t: tuple, dist: str,
-                     fail_prob: float, block: int = 1,
+                     fail_prob: float, faults: FaultProfile = None,
+                     policy: RecoveryPolicy = None, block: int = 1,
                      resolver: str = "fixpoint", scan: str = "seq",
                      summary_backend: str = "xla", trace: bool = False):
     """Per-trial closed-loop raptor replay, closed over the static manifest.
@@ -435,7 +489,20 @@ def _raptor_trial_fn(jobs: int, W: int, A: int, F: int, K: int,
     ``trace=True`` additionally returns ``(arrival, dispatch, worker,
     release)`` per (job, member) — the placement/booking trace the
     property-test harness checks worker-occupancy invariants on.
+
+    ``faults``/``policy`` (static, hashable) switch on the fault branch:
+    exogenous per-trial brownout/crash interval tables, per-attempt
+    policy uniforms, health-aware HA placement, and the chain fold inside
+    the race (``dag_flight_trial``'s ``recovery`` bundle).  Both ``None``
+    (or disabled/default) compiles EXACTLY the pre-fault path — same key
+    splits, same arithmetic, bit-for-bit.
     """
+    fault_mode = ((faults is not None and faults.enabled)
+                  or (policy is not None and not policy.is_default))
+    pol = policy if policy is not None else NO_RECOVERY
+    fp = faults if (faults is not None and faults.enabled) else None
+    anyfail = (can_fail(fail_prob, fp, pol) if fault_mode
+               else fail_prob > 0.0)
     if not block:
         block = max(1, -(-jobs // 3))   # adaptive log-depth split
     seq = jnp.array(seq_t)
@@ -448,7 +515,11 @@ def _raptor_trial_fn(jobs: int, W: int, A: int, F: int, K: int,
 
     def trial(key, rate_hz, rho, means, offset, cv, stage_oh, slat,
               oh_mu, oh_sigma):
-        k_a, k_s, k_f, k_o, k_p = jax.random.split(key, 5)
+        if fault_mode:
+            (k_a, k_s, k_f, k_o, k_p,
+             k_b, k_c, k_e, k_j) = jax.random.split(key, 9)
+        else:
+            k_a, k_s, k_f, k_o, k_p = jax.random.split(key, 5)
         arrivals = jnp.cumsum(
             jax.random.exponential(k_a, (jobs,)) * (1000.0 / rate_hz))
         # one fused draw for the AZ-shared S block and the private X block
@@ -469,12 +540,29 @@ def _raptor_trial_fn(jobs: int, W: int, A: int, F: int, K: int,
             * means + offset + stage_oh
         z_case = jnp.take_along_axis(
             z_case, jnp.broadcast_to(seq, (jobs, A, F, K)), axis=3)
-        if fail_prob == 0.0:
+        if fail_prob == 0.0 or fault_mode:
+            # fault mode folds base errors into the per-attempt chain
+            # uniforms (u_err below) — no precomputed outcome bitmap
             fail_seq = None
         else:
             fail = jax.random.bernoulli(k_f, fail_prob, (jobs, F, K))
             fail_seq = jnp.take_along_axis(fail, jnp.broadcast_to(
                 seq, (jobs, F, K)), axis=2)
+        if fault_mode:
+            # exogenous fault environment: one brownout table per AZ, one
+            # crash table per worker, drawn per trial (policy-only mode
+            # rides the inactive [inf, inf) sentinels)
+            if fp is not None:
+                bs_az, be_az = fp.brownout_tables(k_b, A)
+                cs_w, ce_w = fp.crash_tables(k_c, W)
+            else:
+                bs_az = be_az = jnp.full((A, 1), jnp.inf)
+                cs_w = ce_w = jnp.full((W, 1), jnp.inf)
+            bsW = jnp.take(bs_az, w_az, axis=0)        # (W, I) per worker
+            beW = jnp.take(be_az, w_az, axis=0)
+            R = pol.max_retries
+            u_err = jax.random.uniform(k_e, (jobs, F, K, R + 1))
+            u_jit = jax.random.uniform(k_j, (jobs, F, K, R))
         # with no injected errors every race event is a distinct task
         # completion, so K completions (+ the F joins when members cannot
         # start mid-attempt) bound the race exactly (dag_flight_trial),
@@ -485,9 +573,12 @@ def _raptor_trial_fn(jobs: int, W: int, A: int, F: int, K: int,
         if block <= 1:
             race_events, closed_form = None, False
         else:
-            race_events = ((K if fail_prob == 0.0 else F * K)
+            race_events = ((K if not anyfail else F * K)
                            + (0 if direct else F))
-            closed_form = (F == 2 and K == 2 and fail_prob == 0.0
+            # the closed form knows nothing of inflation/crashes/timeouts,
+            # so fault mode always runs the generic event scan
+            closed_form = (F == 2 and K == 2 and not anyfail
+                           and not fault_mode
                            and direct and not np.asarray(dep_t).any())
         # placement tie-break randomness: the scalar sim picks uniformly
         # among the free (fresh-AZ-preferred) workers.  A deterministic
@@ -500,7 +591,14 @@ def _raptor_trial_fn(jobs: int, W: int, A: int, F: int, K: int,
         prio = jax.random.uniform(k_p, (jobs, W))
 
         def job_body(wfree, inp):
-            if fail_seq is None:
+            if fault_mode:
+                arrival, zcj, ohj, prj, u_e, u_j = inp
+                fj = jnp.zeros((F, K), dtype=bool)
+                # health snapshot at arrival: a worker is healthy iff its
+                # AZ is not browned out when the flight places (the scalar
+                # sim's _pick_worker_for health tier)
+                hw = ~jnp.any((arrival >= bsW) & (arrival < beW), axis=1)
+            elif fail_seq is None:
                 arrival, zcj, ohj, prj = inp
                 fj = jnp.zeros((F, K), dtype=bool)
             else:
@@ -524,10 +622,20 @@ def _raptor_trial_fn(jobs: int, W: int, A: int, F: int, K: int,
                 contended = t_any > arrival
                 free = wf <= arrival
                 elig = fresh & free
-                # one argmax: fresh free workers rank in (1, 2], other free
-                # in (0, 1], busy at -1 — random-uniform within each tier
-                key = jnp.where(elig, prj + 1.0,
-                                jnp.where(free, prj, -1.0))
+                if fault_mode:
+                    # health-aware HA: healthy beats fresh beats neither
+                    # (a browned-out AZ is skipped while ANY healthy free
+                    # worker exists, and placement degrades gracefully to
+                    # fewer zones when brownouts leave too few healthy);
+                    # random-uniform within each tier, like the non-fault
+                    # ranking below
+                    key = jnp.where(free, prj + 2.0 * hw + 1.0 * fresh,
+                                    -1.0)
+                else:
+                    # one argmax: fresh free workers rank in (1, 2], other
+                    # free in (0, 1], busy at -1 — random-uniform per tier
+                    key = jnp.where(elig, prj + 1.0,
+                                    jnp.where(free, prj, -1.0))
                 w = jnp.where(contended, jnp.argmin(wf), jnp.argmax(key))
                 w_hot = jnp.arange(W) == w
                 az = jnp.sum(jnp.where(w_hot, w_az, 0))
@@ -545,13 +653,31 @@ def _raptor_trial_fn(jobs: int, W: int, A: int, F: int, K: int,
             az_hot = jnp.arange(A)[:, None] == m_az[None, :]     # (A, F)
             z_seq = jnp.sum(jnp.where(az_hot[:, :, None], zcj, 0.0),
                             axis=0)
+            if fault_mode:
+                # per-member fault tables follow the actual placement
+                # (one-hot row selects — same no-gather discipline as the
+                # service mixture above): brownouts of the placed AZ,
+                # crashes of the placed worker
+                wk_hot = jnp.arange(W)[None, :] == widx[:, None]  # (F, W)
+                bs_m = jnp.sum(jnp.where(az_hot[:, :, None],
+                                         bs_az[:, None, :], 0.0), axis=0)
+                be_m = jnp.sum(jnp.where(az_hot[:, :, None],
+                                         be_az[:, None, :], 0.0), axis=0)
+                cs_m = jnp.sum(jnp.where(wk_hot[:, :, None],
+                                         cs_w[None, :, :], 0.0), axis=1)
+                ce_m = jnp.sum(jnp.where(wk_hot[:, :, None],
+                                         ce_w[None, :, :], 0.0), axis=1)
+                recovery = (pol, fp, fail_prob, bs_m, be_m, cs_m, ce_m,
+                            u_e, u_j)
+            else:
+                recovery = None
             if closed_form:
                 t_resp, ok, t_rel = _race_f2k2(z_seq, t_disp + ohj)
             else:
                 t_resp, ok, t_rel = dag_flight_trial(
                     z_seq, fj, t_disp + ohj, seq, dep_mask, slat,
                     direct_start=direct, num_events=race_events,
-                    no_failures=fail_prob == 0.0)
+                    no_failures=not anyfail, recovery=recovery)
             # the max-fold into the free-at vector guards the flight-
             # finished-before-dispatch case (the scalar sim skips the
             # dispatch; the worker was never taken); a padded (dead) job
@@ -563,7 +689,9 @@ def _raptor_trial_fn(jobs: int, W: int, A: int, F: int, K: int,
                 out = out + (t_disp, widx, t_rel)
             return (widx, rel), out
 
-        if fail_seq is None:
+        if fault_mode:
+            events = (arrivals, z_case, t_oh, prio, u_err, u_jit)
+        elif fail_seq is None:
             events = (arrivals, z_case, t_oh, prio)
         else:
             events = (arrivals, z_case, fail_seq, t_oh, prio)
@@ -583,10 +711,13 @@ def _raptor_trial_fn(jobs: int, W: int, A: int, F: int, K: int,
 
 
 @functools.lru_cache(maxsize=None)
-def _stock_trial_fn(jobs: int, W: int, K: int, dep_t: tuple,
-                    dist: str, fail_prob: float, passes: int,
+def _stock_trial_fn(jobs: int, W: int, A: int, K: int, dep_t: tuple,
+                    dist: str, fail_prob: float,
+                    faults: FaultProfile = None,
+                    policy: RecoveryPolicy = None, passes: int = 1,
                     has_extras: bool = False, block: int = 1,
-                    backend: str = "scan", scan: str = "seq",
+                    backend: str = "scan", resolver: str = "fixpoint",
+                    scan: str = "seq",
                     summary_backend: str = "xla", trace: bool = False):
     """Per-trial closed-loop stock replay at TASK granularity (task FCFS).
 
@@ -616,19 +747,44 @@ def _stock_trial_fn(jobs: int, W: int, K: int, dep_t: tuple,
     worker)`` — the booking trace the property-test harness (tests/
     test_queue_properties.py) checks invariants on; ``ready`` is the value
     the final scheduling pass actually honored.
+
+    ``faults``/``policy`` (static, hashable) switch on the fault branch:
+    every task expands into ``policy.stock_attempts`` attempt slots
+    (primary + retries + the hedge copy), ALL slots join the one merged
+    ready-sorted stream (unlaunched slots ride at ``ready = inf`` and
+    book nothing), and each booking resolves its outcome against the
+    per-trial brownout/crash tables.  Retry/hedge ready times depend on
+    earlier bookings, so they materialize through the same bounded fixed
+    point that stages already use (``QueueFlightSim`` scales ``passes``
+    by the attempt budget).  Attempts reuse the task's service draw
+    (deterministic re-execution — ``sim/policies.py``); the trace gains
+    an attempt axis plus the per-attempt ``fail`` outcomes.  Both
+    ``None`` (or disabled/default) compiles EXACTLY the pre-fault path.
     """
     dep_rows = np.array(dep_t, dtype=bool)
     has_deps = bool(dep_rows.any())
     root = ~dep_rows.any(axis=1)
     dep_mask = jnp.array(dep_rows)
     root_j = jnp.array(root)
+    fault_mode = ((faults is not None and faults.enabled)
+                  or (policy is not None and not policy.is_default))
+    pol = policy if policy is not None else NO_RECOVERY
+    fp = faults if (faults is not None and faults.enabled) else None
+    A_att = pol.stock_attempts if fault_mode else 1
+    R = pol.max_retries
     N = jobs * K
+    Na = N * A_att
+    w_az = jnp.arange(W) % A
     if not block:
-        block = max(1, -(-N // 3))      # adaptive log-depth split
+        block = max(1, -(-Na // 3))     # adaptive log-depth split
 
     def trial(key, rate_hz, rho, means, extras, offset, cv, stage_oh,
               oh_mu, oh_sigma):
-        k_a, k_z, k_f, k_o = jax.random.split(key, 4)
+        if fault_mode:
+            (k_a, k_z, k_f, k_o,
+             k_b, k_c, k_e, k_j) = jax.random.split(key, 8)
+        else:
+            k_a, k_z, k_f, k_o = jax.random.split(key, 4)
         arrivals = jnp.cumsum(
             jax.random.exponential(k_a, (jobs,)) * (1000.0 / rate_hz))
         # one fused draw for every service mixture (threefry invocations
@@ -641,7 +797,9 @@ def _stock_trial_fn(jobs: int, W: int, K: int, dep_t: tuple,
         z = (rho * zz[:, 0] + (1 - rho) * zz[:, 1]) * means + offset
         if has_extras:
             z = z + (rho * zz[:, 2] + (1 - rho) * zz[:, 3]) * extras
-        if fail_prob == 0.0:
+        if fault_mode:
+            ok = None        # derived from the attempt outcomes below
+        elif fail_prob == 0.0:
             ok = jnp.ones((jobs,), dtype=bool)
         else:
             ok = ~jnp.any(jax.random.bernoulli(k_f, fail_prob, (jobs, K)),
@@ -654,6 +812,24 @@ def _stock_trial_fn(jobs: int, W: int, K: int, dep_t: tuple,
         ready0 = jnp.where(root_j[None, :],
                            arrivals[:, None] + oh0[:, None], jnp.inf)
         z_flat = z.reshape(N)
+        if fault_mode:
+            # exogenous fault environment (policy-only mode rides the
+            # inactive sentinels) + per-attempt policy uniforms; the
+            # service draw is shared across a task's attempts
+            # (deterministic re-execution)
+            if fp is not None:
+                bs_az, be_az = fp.brownout_tables(k_b, A)
+                cs_w, ce_w = fp.crash_tables(k_c, W)
+            else:
+                bs_az = be_az = jnp.full((A, 1), jnp.inf)
+                cs_w = ce_w = jnp.full((W, 1), jnp.inf)
+            bsW = jnp.take(bs_az, w_az, axis=0)        # (W, I) per worker
+            beW = jnp.take(be_az, w_az, axis=0)
+            u_err = jax.random.uniform(k_e, (jobs, K, A_att))
+            u_jit = jax.random.uniform(k_j, (jobs, K, R))
+            infl = fp.degraded_inflation if fp is not None else 1.0
+            pdeg = fp.degraded_fail_prob if fp is not None else fail_prob
+            z_att = jnp.broadcast_to(z[:, :, None], (jobs, K, A_att))
 
         def book(ready, full):
             # ONE merged event stream: every task of every job, ready
@@ -694,6 +870,116 @@ def _stock_trial_fn(jobs: int, W: int, K: int, dep_t: tuple,
             return jnp.where(root_j[None, :], ready0,
                              dmax + stage_oh + ohd)
 
+        if fault_mode:
+            def book_f(att_ready):
+                # joint task-FCFS over every attempt slot: one merged
+                # ready-sorted stream of jobs*K*A_att events; unlaunched
+                # slots ride at ready=inf and book nothing (dead events)
+                order = jnp.argsort(att_ready.reshape(Na), stable=False)
+                r_s = att_ready.reshape(Na)[order]
+                z_s = z_att.reshape(Na)[order]
+                u_s = u_err.reshape(Na)[order]
+
+                def att_body(wf, inp):
+                    r, zb, u = inp
+                    live = ~jnp.isinf(r)
+                    # per-worker start were the attempt booked there: the
+                    # free-at/ready floor pushed past the worker's crash
+                    # outages; earliest start wins, exact ties broken
+                    # toward healthy AZs then lowest index — the oracle's
+                    # lexicographic (start, degraded, w) dispatch key.  A
+                    # flat additive penalty cannot express this in fp32:
+                    # at 1e5 ms the spacing is ~8e-3, so any penalty small
+                    # enough not to flip genuine orderings is absorbed
+                    stw = push_out(jnp.maximum(wf, r), cs_w, ce_w)
+                    deg_w = interval_active(stw, bsW, beW)
+                    tie = stw == jnp.min(stw)
+                    w = jnp.argmin(jnp.where(
+                        tie, deg_w.astype(stw.dtype), jnp.inf))
+                    w_hot = jnp.arange(W) == w
+                    s = jnp.sum(jnp.where(w_hot, stw, 0.0))
+                    deg = jnp.any(w_hot & deg_w)
+                    zi = zb * jnp.where(deg, infl, 1.0)
+                    dur = jnp.minimum(zi, pol.timeout_ms)
+                    p_err = jnp.where(deg, pdeg, fail_prob)
+                    cs_sel = jnp.sum(jnp.where(w_hot[:, None], cs_w, 0.0),
+                                     axis=0)
+                    c1 = first_start_in(s, s + dur, cs_sel)
+                    crashed = c1 < s + dur
+                    end = jnp.where(crashed, c1, s + dur)
+                    fl = (u < p_err) | (zi > pol.timeout_ms) | crashed
+                    rel = jnp.where(live, end, -jnp.inf)
+                    return (w[None], rel[None]), (end, s, fl, w)
+
+                _, outs = blocked_event_replay(
+                    att_body, jnp.zeros(W), (r_s, z_s, u_s), block=block,
+                    resolver=resolver, scan=scan,
+                    summary_backend=summary_backend)
+                fins, sts, fls, wks = outs
+
+                def unsort(v, dtype=None):
+                    buf = (jnp.zeros(Na) if dtype is None
+                           else jnp.zeros(Na, dtype))
+                    return (buf.at[order].set(v[:Na])
+                            .reshape(jobs, K, A_att))
+                return (unsort(fins), unsort(sts), unsort(fls, bool),
+                        unsort(wks, jnp.int32))
+
+            def task_outcomes(fin_a, fl_a):
+                booked = ~jnp.isinf(fin_a)
+                succ = booked & ~fl_a
+                any_s = jnp.any(succ, axis=2)
+                fin_s = jnp.min(jnp.where(succ, fin_a, jnp.inf), axis=2)
+                # a task dies once its retry chain is spent: the LAST
+                # chain attempt launched and failed (any launched hedge
+                # also failed, else any_s); detection = latest attempt end
+                dead = booked[:, :, R] & fl_a[:, :, R]
+                fin_d = jnp.max(jnp.where(booked, fin_a, -jnp.inf),
+                                axis=2)
+                tfin = jnp.where(any_s, fin_s,
+                                 jnp.where(dead, fin_d, jnp.inf))
+                return tfin, any_s
+
+            def fault_ready(fin_a, st_a, fl_a, base_r):
+                # attempt 0 queues at the task's stage ready; retry r
+                # queues backoff after attempt r-1's failure; the hedge
+                # copy queues hedge_ms after attempt 0 started iff the
+                # primary is still running then (outcomes are pre-
+                # resolved, so the gate is exact — no cancellation)
+                booked = ~jnp.isinf(fin_a)
+                cols = [base_r]
+                for a in range(1, pol.chain_attempts):
+                    prev = booked[:, :, a - 1] & fl_a[:, :, a - 1]
+                    back = pol.backoff_ms * (2.0 ** (a - 1)) * (
+                        1.0 + pol.backoff_jitter * u_jit[:, :, a - 1])
+                    cols.append(jnp.where(
+                        prev, fin_a[:, :, a - 1] + back, jnp.inf))
+                if pol.has_hedge:
+                    st0, fin0 = st_a[:, :, 0], fin_a[:, :, 0]
+                    cols.append(jnp.where(
+                        booked[:, :, 0] & (fin0 > st0 + pol.hedge_ms),
+                        st0 + pol.hedge_ms, jnp.inf))
+                return jnp.stack(cols, axis=2)
+
+            att_ready = jnp.concatenate(
+                [ready0[:, :, None],
+                 jnp.full((jobs, K, A_att - 1), jnp.inf)], axis=2)
+            for p in range(passes):
+                fin_a, st_a, fl_a, wk_a = book_f(att_ready)
+                tfin, any_s = task_outcomes(fin_a, fl_a)
+                if p + 1 < passes:
+                    base_r = refresh(tfin) if has_deps else ready0
+                    att_ready = fault_ready(fin_a, st_a, fl_a, base_r)
+            okf = jnp.all(any_s, axis=1)
+            resp = jnp.max(tfin, axis=1) - arrivals
+            if trace:
+                # the drawn fault tables ride along so the property-test
+                # harness can check bookings against the outages they
+                # were scheduled around
+                return resp, okf, (arrivals, att_ready, st_a, fin_a,
+                                   wk_a, fl_a, cs_w, ce_w, bs_az, be_az)
+            return resp, okf
+
         ready = ready0
         for p in range(passes):
             fin, start, wkr = book(ready, trace and p + 1 == passes)
@@ -709,6 +995,8 @@ def _stock_trial_fn(jobs: int, W: int, K: int, dep_t: tuple,
 
 @functools.lru_cache(maxsize=None)
 def _raptor_runner(jobs, W, A, F, K, seq_t, dep_t, dist, fail_prob,
+                   faults: FaultProfile = None,
+                   policy: RecoveryPolicy = None,
                    block: int = 1, resolver: str = "fixpoint",
                    scan: str = "seq", summary_backend: str = "xla",
                    trace: bool = False):
@@ -718,18 +1006,22 @@ def _raptor_runner(jobs, W, A, F, K, seq_t, dep_t, dist, fail_prob,
     same per-trial body over the config axis and shards it over the mesh.
     """
     trial = _raptor_trial_fn(jobs, W, A, F, K, seq_t, dep_t, dist,
-                             fail_prob, block, resolver, scan,
-                             summary_backend, trace)
+                             fail_prob, faults, policy, block, resolver,
+                             scan, summary_backend, trace)
     return jax.jit(jax.vmap(trial, in_axes=(0,) + (None,) * 9))
 
 
 @functools.lru_cache(maxsize=None)
-def _stock_runner(jobs, W, K, dep_t, dist, fail_prob, passes,
+def _stock_runner(jobs, W, A, K, dep_t, dist, fail_prob,
+                  faults: FaultProfile = None,
+                  policy: RecoveryPolicy = None, passes: int = 1,
                   has_extras: bool = False, block: int = 1,
-                  backend: str = "scan", scan: str = "seq",
+                  backend: str = "scan", resolver: str = "fixpoint",
+                  scan: str = "seq",
                   summary_backend: str = "xla", trace: bool = False):
-    trial = _stock_trial_fn(jobs, W, K, dep_t, dist, fail_prob,
-                            passes, has_extras, block, backend, scan,
+    trial = _stock_trial_fn(jobs, W, A, K, dep_t, dist, fail_prob,
+                            faults, policy, passes, has_extras, block,
+                            backend, resolver, scan,
                             summary_backend, trace)
     return jax.jit(jax.vmap(trial, in_axes=(0,) + (None,) * 9))
 
@@ -784,7 +1076,9 @@ class QueueFlightSim:
                  stock_extra_passes: int = 1, block: int = None,
                  resolver: str = "auto", scan: str = "auto",
                  booking_backend: str = "scan",
-                 summary_backend: str = "xla"):
+                 summary_backend: str = "xla",
+                 faults: FaultProfile = None,
+                 recovery: RecoveryPolicy = None):
         """``stock_extra_passes``: extra fixed-point iterations of the
         task-FCFS stock schedule beyond the ``stage_depth + 1`` needed to
         materialize every ready time.  Dep-free stock graphs (keygen,
@@ -812,7 +1106,16 @@ class QueueFlightSim:
         fused VMEM booking kernel, ``repro.kernels.queue_booking``) for
         the stock stream; ``summary_backend`` routes the log-depth
         summary prefix ("xla" or the ``repro.kernels.maxplus_scan``
-        VMEM kernel)."""
+        VMEM kernel).
+
+        ``faults``/``recovery``: the fault environment
+        (:class:`repro.sim.faults.FaultProfile`) and attempt-level
+        policy (:class:`repro.sim.policies.RecoveryPolicy`); ``None``
+        defaults from the workload's own fields, explicit kwargs win.
+        An enabled profile or non-default policy flips both engines onto
+        the fault branch (still block/resolver/scan invariant, bitwise);
+        it is incompatible with ``booking_backend="pallas"``, whose
+        fused kernel books plain FCFS finishes only."""
         self.wl = wl
         self.W = int(num_workers)
         self.A = int(num_azs)
@@ -838,6 +1141,22 @@ class QueueFlightSim:
         self.scan = str(scan)
         self.booking_backend = str(booking_backend)
         self.summary_backend = str(summary_backend)
+        self.faults = faults if faults is not None else wl.faults
+        self.recovery = (recovery if recovery is not None
+                         else (wl.recovery if wl.recovery is not None
+                               else NO_RECOVERY))
+        # statics handed to the cached trial builders: None unless they
+        # change behavior, so disabled profiles share the pre-fault
+        # compile cache entries (and their bitwise output)
+        self._fp = (self.faults if (self.faults is not None
+                                    and self.faults.enabled) else None)
+        self.fault_mode = (self._fp is not None
+                           or not self.recovery.is_default)
+        self._policy = self.recovery if self.fault_mode else None
+        if self.fault_mode and self.booking_backend == "pallas":
+            raise ValueError(
+                "booking_backend='pallas' books plain FCFS finish times "
+                "only; fault injection needs the generic scan substrate")
         ha = self.A > 1
         self.oh_mu, self.oh_sigma = lognormal_params(
             *OverheadModel.TABLE[(ha, load)])
@@ -857,8 +1176,19 @@ class QueueFlightSim:
             if ds.size:
                 depth[t] = 1 + int(depth[ds].max())
         self._sdepth = int(depth.max())
-        self._spasses = (1 if self._sdepth == 0
-                         else self._sdepth + 1 + int(stock_extra_passes))
+        if self.fault_mode:
+            # the retry/hedge readies materialize through the same
+            # bounded fixed point as staged readies: each stage level
+            # needs its whole attempt chain resolved before dependents'
+            # estimates settle, so the pass budget scales by the
+            # per-task attempt count
+            self._spasses = ((self._sdepth + 1)
+                             * self.recovery.stock_attempts
+                             + int(stock_extra_passes))
+        else:
+            self._spasses = (1 if self._sdepth == 0
+                             else self._sdepth + 1
+                             + int(stock_extra_passes))
 
     # -- compiled runners ------------------------------------------------
     def engine_config(self, engine: str) -> Tuple[int, str, str]:
@@ -879,17 +1209,17 @@ class QueueFlightSim:
             int(jobs), self.W, self.A, self.flight, len(self.wl.tasks),
             tuple(map(tuple, self._seq.tolist())),
             tuple(map(tuple, self._dep.tolist())),
-            self.wl.dist, self.wl.fail_prob, blk, res, sc,
-            self.summary_backend, trace)
+            self.wl.dist, self.wl.fail_prob, self._fp, self._policy,
+            blk, res, sc, self.summary_backend, trace)
 
     def _stock_fn(self, jobs: int, trace: bool = False):
-        blk, _, sc = self.engine_config("stock")
+        blk, res, sc = self.engine_config("stock")
         return _stock_runner(
-            int(jobs), self.W, len(self._smeans),
+            int(jobs), self.W, self.A, len(self._smeans),
             tuple(map(tuple, self._sdep.tolist())),
-            self.wl.dist, self.wl.fail_prob, self._spasses,
-            bool(self._sextras.any()), blk,
-            self.booking_backend, sc, self.summary_backend, trace)
+            self.wl.dist, self.wl.fail_prob, self._fp, self._policy,
+            self._spasses, bool(self._sextras.any()), blk,
+            self.booking_backend, res, sc, self.summary_backend, trace)
 
     def _raptor_args(self):
         wl = self.wl
@@ -947,6 +1277,23 @@ class QueueFlightSim:
                     "worker": np.asarray(widx),
                     "release": np.asarray(rel)}
         fn = self._stock_fn(jobs, trace=True)
+        if self.fault_mode:
+            # fault-mode stock traces carry the attempt axis (jobs, K,
+            # A_att) plus the per-attempt failure outcomes; an unlaunched
+            # attempt slot shows ready/start/fin = inf.  The per-trial
+            # fault tables ((W, C) crash and (A, I) brownout intervals)
+            # ride along for outage-aware invariant checks.
+            resp, ok, (arr, ready, start, fin, wkr, fl,
+                       cs, ce, bs, be) = fn(
+                self._keys(trials, False), *self._stock_args())
+            return {"response": np.asarray(resp), "ok": np.asarray(ok),
+                    "arrival": np.asarray(arr),
+                    "ready": np.asarray(ready),
+                    "start": np.asarray(start), "fin": np.asarray(fin),
+                    "worker": np.asarray(wkr), "fail": np.asarray(fl),
+                    "crash_start": np.asarray(cs),
+                    "crash_end": np.asarray(ce),
+                    "az_start": np.asarray(bs), "az_end": np.asarray(be)}
         resp, ok, (arr, ready, start, fin, wkr) = fn(
             self._keys(trials, False), *self._stock_args())
         return {"response": np.asarray(resp), "ok": np.asarray(ok),

@@ -8,7 +8,9 @@ column (and to 2*E[min]/E[max] = 2/3) is the reproduction result.
 from __future__ import annotations
 
 from repro.sim.cluster import Cluster
+from repro.sim.faults import FaultProfile
 from repro.sim.flights import SimWorkload
+from repro.sim.policies import RecoveryPolicy
 
 # load levels as utilisation targets of the flight variant's capacity —
 # shared by the scalar experiment drivers and the vectorized queue engine
@@ -28,7 +30,9 @@ KEYGEN_CV = 1.45
 KEYGEN_OFFSET_MS = 40.0
 
 
-def keygen_workload(fail_prob: float = 0.0) -> SimWorkload:
+def keygen_workload(fail_prob: float = 0.0,
+                    faults: FaultProfile = None,
+                    recovery: RecoveryPolicy = None) -> SimWorkload:
     return SimWorkload(
         name="ssh-keygen",
         tasks=["keygen_a", "keygen_b"],
@@ -39,6 +43,8 @@ def keygen_workload(fail_prob: float = 0.0) -> SimWorkload:
         stock_stage_overhead=0.0,
         fail_prob=fail_prob,
         work_est_ws=1.9,
+        faults=faults,
+        recovery=recovery,
     )
 
 
@@ -49,7 +55,9 @@ WC_REDUCE_MS = 420.0
 WC_STORAGE_HOP_MS = 800.0      # S3/GCS round-trip on the stock control path
 
 
-def wordcount_workload() -> SimWorkload:
+def wordcount_workload(fail_prob: float = 0.0,
+                       faults: FaultProfile = None,
+                       recovery: RecoveryPolicy = None) -> SimWorkload:
     means = {"split": WC_SPLIT_MS, "reduce": WC_REDUCE_MS}
     means.update({f"map{i}": WC_MAP_MS for i in range(4)})
 
@@ -71,7 +79,10 @@ def wordcount_workload() -> SimWorkload:
         concurrency=2,
         make_draws=make_draws,
         stock_stage_overhead=WC_STORAGE_HOP_MS,
+        fail_prob=fail_prob,
         work_est_ws=4.2,
+        faults=faults,
+        recovery=recovery,
     )
 
 
@@ -88,7 +99,9 @@ THUMB_RESIZE_MS = 800.0
 THUMB_CV = 0.22
 
 
-def thumbnail_workload() -> SimWorkload:
+def thumbnail_workload(fail_prob: float = 0.0,
+                       faults: FaultProfile = None,
+                       recovery: RecoveryPolicy = None) -> SimWorkload:
     means = {"download": THUMB_DOWNLOAD_MS}
     means.update({f"thumb{i}": THUMB_RESIZE_MS for i in range(4)})
 
@@ -115,7 +128,10 @@ def thumbnail_workload() -> SimWorkload:
         concurrency=4,
         make_draws=make_draws,
         stock_stage_overhead=0.0,
+        fail_prob=fail_prob,
         work_est_ws=5.6,
+        faults=faults,
+        recovery=recovery,
         stock_tasks=thumbs,                 # stock fns are self-contained
         stock_deps={t: () for t in thumbs},
     )
@@ -126,7 +142,9 @@ RELIABILITY_MEAN_MS = 100.0
 RELIABILITY_CV = 0.05
 
 
-def reliability_workload(n_tasks: int, fail_prob: float) -> SimWorkload:
+def reliability_workload(n_tasks: int, fail_prob: float,
+                         faults: FaultProfile = None,
+                         recovery: RecoveryPolicy = None) -> SimWorkload:
     tasks = [f"busy{i}" for i in range(n_tasks)]
     return SimWorkload(
         name=f"busy{n_tasks}",
@@ -137,4 +155,6 @@ def reliability_workload(n_tasks: int, fail_prob: float) -> SimWorkload:
                                        cv=RELIABILITY_CV),
         fail_prob=fail_prob,
         work_est_ws=0.1 * n_tasks * 2,
+        faults=faults,
+        recovery=recovery,
     )

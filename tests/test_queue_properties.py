@@ -328,6 +328,171 @@ def test_fixpoint_pass_bound_with_failures():
 
 
 # ------------------------------------------------------------------
+# fault injection: booking invariants + bitwise block invariance
+# ------------------------------------------------------------------
+# The fault branch reroutes BOTH engines onto attempt-level machinery
+# (sim/faults.py tables + sim/policies.py chains) while keeping every
+# booking a deterministic function of (worker free-at, exogenous tables)
+# — so the block/resolver/scan bitwise guarantee must survive fault
+# injection, and the booking traces must satisfy the *fault-aware*
+# queue invariants: no double-booking across crash/requeue, no attempt
+# started inside a crash outage, no attempt running through a crash,
+# and work conservation where "work" counts retried + hedged attempts
+# and a crashed-out worker is not idle.
+
+from repro.sim.faults import FaultProfile  # noqa: E402
+from repro.sim.policies import RecoveryPolicy  # noqa: E402
+
+FAULTS = FaultProfile(az_mtbf_ms=24_000.0, az_mttr_ms=6_000.0,
+                      degraded_inflation=2.0, degraded_fail_prob=0.05,
+                      crash_mtbf_ms=300_000.0, crash_restart_ms=2_000.0)
+POLICY = RecoveryPolicy(timeout_ms=6_000.0, max_retries=1,
+                        backoff_ms=50.0, backoff_jitter=0.5,
+                        hedge_ms=2_500.0)
+
+
+def assert_stock_fault_invariants(tr, W):
+    """Attempt-level task-FCFS invariants on a fault-mode stock trace."""
+    T = tr["arrival"].shape[0]
+    for t in range(T):
+        r = tr["ready"][t].reshape(-1)
+        s = tr["start"][t].reshape(-1)
+        f = tr["fin"][t].reshape(-1)
+        w = tr["worker"][t].reshape(-1)
+        cs, ce = tr["crash_start"][t], tr["crash_end"][t]
+        live = np.isfinite(s)
+        # every launched attempt honors its ready time
+        assert np.all(s[live] >= r[live] - EPS), f"trial {t}: early start"
+        # no attempt starts inside its worker's crash outage, and no
+        # attempt runs THROUGH a crash (a crash kills it at the instant)
+        for i in np.where(live)[0]:
+            wk = w[i]
+            inside = (s[i] >= cs[wk] - EPS) & (s[i] < ce[wk] - EPS)
+            assert not inside.any(), (
+                f"trial {t}: attempt {i} starts inside an outage")
+            through = (cs[wk] > s[i] + EPS) & (cs[wk] < f[i] - EPS)
+            assert not through.any(), (
+                f"trial {t}: attempt {i} runs through a crash")
+        # no double-booking across crash/requeue: all attempt intervals
+        # on one worker (retries + hedges included) stay disjoint
+        for wk in range(W):
+            sel = live & (w == wk)
+            iv = np.stack([s[sel], f[sel]], axis=1)
+            iv = iv[np.argsort(iv[:, 0])]
+            gap = iv[1:, 0] - iv[:-1, 1]
+            assert np.all(gap >= -EPS), (
+                f"trial {t}: worker {wk} double-booked by {-gap.min()}ms")
+        # work conservation counting retried/hedged attempts: a waiting
+        # attempt implies every worker is busy (with SOME attempt) or
+        # crashed out at the midpoint of the wait
+        for i in np.where(live & (s > r + EPS))[0]:
+            tt = 0.5 * (r[i] + s[i])
+            busy = set(w[live & (s <= tt) & (f > tt)])
+            down = {wk for wk in range(W)
+                    if ((cs[wk] <= tt) & (tt < ce[wk])).any()}
+            free = set(range(W)) - busy - down
+            assert not free, (
+                f"trial {t}: attempt {i} waits at {tt}ms while "
+                f"workers {sorted(free)} idle and healthy")
+
+
+def test_stock_fault_invariants_grid():
+    for wl, seed in (("keygen", 0), ("wordcount", 1)):
+        sim = QueueFlightSim(WORKLOADS[wl](), num_workers=10, num_azs=3,
+                             load="medium", seed=seed, faults=FAULTS,
+                             recovery=POLICY)
+        tr = sim.trace_run(128, 2, raptor=False)
+        assert_stock_fault_invariants(tr, 10)
+        # attempt slots beyond the launched chain stay unscheduled
+        assert np.isinf(tr["ready"]).any(), "no retry/hedge slot unused?"
+        # at least one retry or hedge actually launched (the profile is
+        # hot enough that an all-primary run means the wiring is dead)
+        assert np.isfinite(tr["ready"][:, :, :, 1:]).any()
+
+
+def test_raptor_fault_occupancy_invariants():
+    """Raptor under faults books whole chains: occupancy intervals must
+    stay disjoint and placement all-distinct, same as fault-free."""
+    sim = QueueFlightSim(keygen_queue(), num_workers=10, num_azs=3,
+                         load="medium", seed=3, faults=FAULTS,
+                         recovery=RecoveryPolicy(timeout_ms=6_000.0,
+                                                 max_retries=1,
+                                                 backoff_ms=50.0))
+    tr = sim.trace_run(128, 2, raptor=True)
+    assert_raptor_invariants(tr, 10)
+
+
+def test_blocked_replay_fault_invariance():
+    """With faults + policy enabled every blocked/logdepth config must
+    stay bitwise-identical to the block=1 oracle — runs AND traces, both
+    engines (the tentpole acceptance pin)."""
+    wl = keygen_queue(fail_prob=0.01, faults=FAULTS, recovery=POLICY)
+    jobs, trials = 96, 2
+    for raptor in (False, True):
+        oracle = QueueFlightSim(wl, num_workers=10, num_azs=3,
+                                load="medium", seed=5, block=1)
+        base = np.asarray(oracle.run(jobs, trials,
+                                     raptor=raptor).response_ms)
+        base_ok = np.asarray(oracle.run(jobs, trials, raptor=raptor).ok)
+        base_tr = oracle.trace_run(jobs, trials, raptor=raptor)
+        for block, resolver, scan in ((16, "fixpoint", "seq"),
+                                      (16, "unrolled", "logdepth"),
+                                      (0, "unrolled", "logdepth")):
+            sim = QueueFlightSim(wl, num_workers=10, num_azs=3,
+                                 load="medium", seed=5, block=block,
+                                 resolver=resolver, scan=scan)
+            res = sim.run(jobs, trials, raptor=raptor)
+            np.testing.assert_array_equal(
+                np.asarray(res.response_ms), base,
+                err_msg=f"raptor={raptor} block={block}/{resolver}/{scan}")
+            np.testing.assert_array_equal(np.asarray(res.ok), base_ok)
+            tr = sim.trace_run(jobs, trials, raptor=raptor)
+            for k in tr:
+                np.testing.assert_array_equal(
+                    tr[k], base_tr[k],
+                    err_msg=f"raptor={raptor} block={block}/{resolver}/"
+                            f"{scan}: trace {k} diverged")
+
+
+def test_disabled_faults_compile_to_prefault_path():
+    """A disabled FaultProfile + default policy must reproduce the
+    no-faults engines bitwise — the static elision contract."""
+    base = QueueFlightSim(keygen_queue(), num_workers=10, num_azs=3,
+                          load="medium", seed=8)
+    gated = QueueFlightSim(keygen_queue(faults=FaultProfile(),
+                                        recovery=RecoveryPolicy()),
+                           num_workers=10, num_azs=3, load="medium",
+                           seed=8)
+    for raptor in (False, True):
+        a = base.run(128, 2, raptor=raptor)
+        b = gated.run(128, 2, raptor=raptor)
+        np.testing.assert_array_equal(np.asarray(a.response_ms),
+                                      np.asarray(b.response_ms))
+        np.testing.assert_array_equal(np.asarray(a.ok), np.asarray(b.ok))
+
+
+@hypothesis.given(
+    seed=st.integers(min_value=0, max_value=2**16),
+    retries=st.integers(min_value=0, max_value=2),
+    hedge=st.booleans(),
+    crashes=st.booleans(),
+)
+@hypothesis.settings(max_examples=6, deadline=None)
+def test_stock_fault_invariants_property(seed, retries, hedge, crashes):
+    fp = FaultProfile(az_mtbf_ms=20_000.0, az_mttr_ms=5_000.0,
+                      degraded_inflation=2.5, degraded_fail_prob=0.08,
+                      crash_mtbf_ms=250_000.0 if crashes else 0.0,
+                      crash_restart_ms=2_000.0)
+    pol = RecoveryPolicy(timeout_ms=5_000.0, max_retries=retries,
+                         backoff_ms=40.0,
+                         hedge_ms=2_000.0 if hedge else float("inf"))
+    sim = QueueFlightSim(keygen_queue(), num_workers=8, num_azs=3,
+                         load="medium", seed=seed, faults=fp, recovery=pol)
+    tr = sim.trace_run(96, 2, raptor=False)
+    assert_stock_fault_invariants(tr, 8)
+
+
+# ------------------------------------------------------------------
 # hypothesis tier (random deployments; skips when hypothesis is absent)
 # ------------------------------------------------------------------
 
