@@ -8,8 +8,14 @@ against the checked-in baseline and exits non-zero when any tracked metric
 regressed by more than ``factor`` (default 2.5x — two PRs of GH-runner
 numbers showed run-to-run spread well under 2x vs the recording box, and
 the failure mode the gate exists for, an accidental de-vectorization,
-costs 50-150x).  Metrics missing from either file are skipped, so the
-gate tolerates schema growth in both directions.
+costs 50-150x).
+
+Missing-tier semantics: a tracked metric absent from the BASELINE is a
+brand-new tier — an explicit, printed PASS-with-note (the gate has no
+reference yet; the regenerated baseline picks it up next PR).  A tracked
+metric absent from the MEASURED file is a hard failure: the tier silently
+fell out of the bench run, which is exactly the kind of coverage rot a
+gate exists to catch.
 """
 from __future__ import annotations
 
@@ -26,6 +32,7 @@ TRACKED = [
     (("dag_wordcount", "jobs_per_s"), "wordcount DAG jobs/s"),
     (("queue_stock_taskfcfs", "jobs_per_s"), "task-FCFS stock jobs/s"),
     (("queue_faults", "jobs_per_s"), "fault-injected queue jobs/s"),
+    (("queue_streaming", "jobs_per_s"), "streaming open-load queue jobs/s"),
     (("fig6_sweep", "vector_jobs_per_s"), "fig6 load-sweep jobs/s"),
     (("sweep_sharded", "jobs_per_s"), "device-sharded sweep-grid jobs/s"),
 ]
@@ -54,9 +61,15 @@ def main() -> int:
     failures = []
     for path, label in TRACKED:
         b, m = _get(base, path), _get(meas, path)
-        if b is None or m is None:
-            print(f"skip  {label}: missing "
-                  f"({'baseline' if b is None else 'measured'})")
+        if m is None:
+            print(f"FAIL  {label}: missing from the measured run "
+                  f"(tier dropped out of the bench job)")
+            failures.append((label, b if b is not None else float("nan"),
+                             0.0, float("inf")))
+            continue
+        if b is None:
+            print(f"PASS  {label}: new tier, no baseline yet "
+                  f"(measured={m:.0f}; gate starts next regeneration)")
             continue
         ratio = b / m if m else float("inf")
         status = "FAIL" if ratio > args.factor else "ok"

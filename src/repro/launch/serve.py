@@ -1,7 +1,11 @@
-"""Serving launcher: batched generation with optional Raptor flights.
+"""Serving launcher: batched generation with optional Raptor flights, or
+the live streaming scheduler service.
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --reduced \
         --flight 2 --requests 4
+
+    PYTHONPATH=src python -m repro.launch.serve --mode scheduler \
+        --workload keygen --load high --jobs 4096 --arrival mmpp
 """
 from __future__ import annotations
 
@@ -10,39 +14,126 @@ import sys
 
 import jax
 
-from repro.configs import get_config, reduced_config
-from repro.models import init_params
-from repro.serving.engine import ServeConfig, ServingEngine, demo_requests
 
-
-def main(argv=None) -> int:
+def _build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=("generate", "scheduler"),
+                    default="generate",
+                    help="generate: batched model serving; scheduler: the "
+                         "open-arrival Raptor scheduling service")
+    # -- generate mode -------------------------------------------------
     ap.add_argument("--arch", default="gemma-2b")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--decode-steps", type=int, default=8)
+    ap.add_argument("--max-len", type=int, default=None,
+                    help="KV-cache budget; default prompt+decode+8")
     ap.add_argument("--flight", type=int, default=1)
     ap.add_argument("--jitter-ms", type=float, default=0.0)
-    args = ap.parse_args(argv)
+    # -- scheduler mode ------------------------------------------------
+    ap.add_argument("--workload", default="keygen",
+                    choices=("keygen", "wordcount", "thumbnail",
+                             "heavytail"))
+    ap.add_argument("--load", default="medium")
+    ap.add_argument("--workers", type=int, default=15)
+    ap.add_argument("--azs", type=int, default=3)
+    ap.add_argument("--jobs", type=int, default=4096)
+    ap.add_argument("--microbatch", type=int, default=64)
+    ap.add_argument("--arrival", default="poisson",
+                    choices=("poisson", "mmpp", "diurnal"))
+    ap.add_argument("--slo-ms", type=float, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    return ap
 
+
+def _validate(args: argparse.Namespace) -> None:
+    """Reject misconfigurations up front with clear ValueErrors (a silent
+    negative jitter or an overflowing decode budget corrupts the very
+    latency numbers the run exists to measure)."""
+    if args.jitter_ms < 0.0:
+        raise ValueError(
+            f"--jitter-ms must be >= 0, got {args.jitter_ms}")
+    if args.prompt_len < 1:
+        raise ValueError(f"--prompt-len must be >= 1, got {args.prompt_len}")
+    if args.decode_steps < 1:
+        raise ValueError(
+            f"--decode-steps must be >= 1, got {args.decode_steps}")
+    max_len = (args.max_len if args.max_len is not None
+               else args.prompt_len + args.decode_steps + 8)
+    if args.prompt_len + args.decode_steps > max_len:
+        raise ValueError(
+            f"--prompt-len {args.prompt_len} + --decode-steps "
+            f"{args.decode_steps} overflows --max-len {max_len}")
+    args.max_len = max_len
+    if args.jobs < 1:
+        raise ValueError(f"--jobs must be >= 1, got {args.jobs}")
+    if args.microbatch < 1:
+        raise ValueError(f"--microbatch must be >= 1, got {args.microbatch}")
+
+
+def _run_generate(args) -> int:
+    from repro.configs import get_config, reduced_config
+    from repro.models import init_params
+    from repro.serving.engine import (ServeConfig, ServingEngine,
+                                      demo_requests)
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced_config(cfg)
     params = init_params(cfg, jax.random.PRNGKey(0))
     eng = ServingEngine(cfg, params, ServeConfig(
-        max_len=args.prompt_len + args.decode_steps + 8,
+        max_len=args.max_len,
         decode_steps=args.decode_steps, flight_size=args.flight,
         mean_jitter_s=args.jitter_ms / 1e3))
-
-    for i in range(args.requests):
-        batch = demo_requests(cfg, args.batch, args.prompt_len, seed=i)
-        res = (eng.generate_flight(batch) if args.flight > 1
-               else eng.generate(batch))
-        print(f"req {i}: {res.latency_s*1e3:.0f} ms  "
-              f"tokens={res.tokens[:, :6].tolist()}...")
+    batches = [demo_requests(cfg, args.batch, args.prompt_len, seed=i)
+               for i in range(args.requests)]
+    stats = eng.serve(batches, raptor=args.flight > 1)
+    s = stats.summary()
+    print(f"cold compile {s['cold_s']*1e3:.0f} ms, warm ref "
+          f"{s['warm_s']*1e3:.0f} ms (excluded from latencies)")
+    print(f"{s['requests']} requests: mean {s['mean_s']*1e3:.0f} ms  "
+          f"p50 {s['p50_s']*1e3:.0f} ms  p99 {s['p99_s']*1e3:.0f} ms")
     return 0
+
+
+def _run_scheduler(args) -> int:
+    from repro.serving.engine import SchedulerService
+    from repro.sim.events import (DiurnalArrivals, MMPPArrivals,
+                                  PoissonArrivals)
+    from repro.sim.vector_queue import (QueueFlightSim, heavytail_queue,
+                                        keygen_queue, thumbnail_queue,
+                                        wordcount_queue)
+    wl = {"keygen": keygen_queue, "wordcount": wordcount_queue,
+          "thumbnail": thumbnail_queue, "heavytail": heavytail_queue}[
+              args.workload]()
+    sim = QueueFlightSim(wl, num_workers=args.workers, num_azs=args.azs,
+                         load=args.load, seed=args.seed)
+    proc = {"poisson": lambda: PoissonArrivals(sim.rate_hz, seed=args.seed),
+            "mmpp": lambda: MMPPArrivals(sim.rate_hz, seed=args.seed),
+            "diurnal": lambda: DiurnalArrivals(sim.rate_hz, seed=args.seed),
+            }[args.arrival]()
+    svc = SchedulerService(sim, microbatch=args.microbatch, seed=args.seed)
+    rep = svc.run_open_load(jobs=args.jobs, microbatch=args.microbatch,
+                            slo_ms=args.slo_ms, process=proc,
+                            seed=args.seed)
+    print(f"{args.workload} @ {args.load} ({args.arrival} arrivals, "
+          f"{sim.W} workers/{sim.A} AZs):")
+    print(f"  sustained {rep.jobs_per_s:,.0f} jobs/s "
+          f"({rep.jobs} jobs in {rep.wall_s*1e3:.0f} ms wall)")
+    print(f"  sojourn mean {rep.mean_ms:.0f} ms  p50 {rep.p50_ms:.0f} ms  "
+          f"p99 {rep.p99_ms:.0f} ms")
+    print(f"  SLO {rep.slo_ms:.0f} ms violated "
+          f"{rep.slo_violation_frac*100:.1f}% (ok {rep.ok_frac*100:.1f}%)")
+    return 0
+
+
+def main(argv=None) -> int:
+    args = _build_parser().parse_args(argv)
+    _validate(args)
+    if args.mode == "scheduler":
+        return _run_scheduler(args)
+    return _run_generate(args)
 
 
 if __name__ == "__main__":

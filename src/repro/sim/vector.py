@@ -121,14 +121,27 @@ def _stationary_deg(key, trials: int, num_azs: int, fp: FaultProfile):
 # --------------------------------------------------------------------------
 
 def unit_draws(key, shape, dist: str, cv):
-    """Unit-mean service draws: exp(1) or lognormal(mean=1, cv).
+    """Unit-mean service draws: exp(1), lognormal(mean=1, cv), or
+    Pareto(mean=1, cv).
 
     ``cv`` may be traced.  Both vectorized tiers (this open-loop module and
     the closed-loop :mod:`repro.sim.vector_queue`) draw through this one
     helper so the service-time model cannot silently diverge between them.
+
+    "pareto" is the heavy-tail family of the streaming traffic bank:
+    classic Pareto(alpha, xm) with alpha = 1 + sqrt(1 + 1/cv^2) (always
+    > 2, so mean and variance both exist and hit the requested cv) and
+    xm = (alpha - 1)/alpha (unit mean), drawn by inversion
+    X = xm * U^(-1/alpha).
     """
     if dist == "exp":
         return jax.random.exponential(key, shape)
+    if dist == "pareto":
+        alpha = 1.0 + jnp.sqrt(1.0 + 1.0 / (cv * cv))
+        xm = (alpha - 1.0) / alpha
+        u = jax.random.uniform(key, shape,
+                               minval=jnp.finfo(jnp.float32).tiny)
+        return xm * u ** (-1.0 / alpha)
     sigma2 = jnp.log1p(cv * cv)
     mu = -sigma2 / 2
     return jnp.exp(mu + jnp.sqrt(sigma2) * jax.random.normal(key, shape))

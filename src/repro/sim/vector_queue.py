@@ -180,6 +180,32 @@ def thumbnail_queue(fail_prob: float = 0.0, faults: FaultProfile = None,
         faults=faults, recovery=recovery)
 
 
+def heavytail_queue(num_tasks: int = 2, mean_ms: float = 1000.0,
+                    flight: int = 2, cv: float = 2.5, dist: str = "pareto",
+                    fail_prob: float = 0.0,
+                    faults: FaultProfile = None,
+                    recovery: RecoveryPolicy = None) -> QueueWorkload:
+    """Heavy-tailed service family for the streaming traffic bank.
+
+    ``dist`` picks the tail: "pareto" (power-law, alpha = 1 +
+    sqrt(1 + 1/cv^2) > 2 so the mean load target still holds — see
+    :func:`repro.sim.vector.unit_draws`) or "lognorm" at high cv.  Both
+    keep unit mean, so ``work_est_ws`` and the UTIL load targets stay
+    comparable with :func:`exponential_queue` at equal ``mean_ms``.
+    """
+    if dist not in ("pareto", "lognorm"):
+        raise ValueError(
+            f"heavy-tail dist must be 'pareto' or 'lognorm', got {dist!r}")
+    if cv <= 0.0:
+        raise ValueError(f"cv must be positive, got {cv}")
+    return QueueWorkload(
+        f"{dist}{num_tasks}", tuple(f"t{i}" for i in range(num_tasks)),
+        (mean_ms,) * num_tasks, ((),) * num_tasks, flight=flight,
+        dist=dist, cv=cv, fail_prob=fail_prob,
+        work_est_ws=num_tasks * mean_ms / 1000.0,
+        faults=faults, recovery=recovery)
+
+
 def exponential_queue(num_tasks: int = 2, mean_ms: float = 1000.0,
                       flight: int = 2, fail_prob: float = 0.0,
                       faults: FaultProfile = None,
@@ -461,6 +487,227 @@ def auto_config(engine: str, scan: str = "auto") -> Tuple[int, str, str]:
     return (64, "fixpoint", scan) if accel else (8, "unrolled", scan)
 
 
+def _raptor_mode(fail_prob: float, faults: FaultProfile,
+                 policy: RecoveryPolicy):
+    """Resolve the fault-branch statics shared by the whole-trace trial
+    builder and the streaming microbatch stepper (one definition, so the
+    two paths can never disagree on what flips the fault branch)."""
+    fault_mode = ((faults is not None and faults.enabled)
+                  or (policy is not None and not policy.is_default))
+    pol = policy if policy is not None else NO_RECOVERY
+    fp = faults if (faults is not None and faults.enabled) else None
+    anyfail = (can_fail(fail_prob, fp, pol) if fault_mode
+               else fail_prob > 0.0)
+    return fault_mode, pol, fp, anyfail
+
+
+def _raptor_env(fp: FaultProfile, k_b, k_c, A: int, W: int):
+    """Exogenous fault environment: one brownout table per AZ, one crash
+    table per worker (policy-only mode rides the inactive [inf, inf)
+    sentinels).  Drawn per trial by the whole-trace replay and once per
+    stream by the streaming scheduler."""
+    if fp is not None:
+        bs_az, be_az = fp.brownout_tables(k_b, A)
+        cs_w, ce_w = fp.crash_tables(k_c, W)
+    else:
+        bs_az = be_az = jnp.full((A, 1), jnp.inf)
+        cs_w = ce_w = jnp.full((W, 1), jnp.inf)
+    return bs_az, be_az, cs_w, ce_w
+
+
+def _raptor_job_draws(ks, arrivals, *, W, A, F, K, seq, dist, cv, rho,
+                      means, offset, stage_oh, oh_mu, oh_sigma, fail_prob,
+                      fault_mode, R):
+    """Per-job event tensors for one batch of arrivals — the event pytree
+    :func:`_raptor_job_body` books, WITHOUT the trial-level fault tables.
+    Shared verbatim by the whole-trace trial and the streaming engine's
+    per-microbatch draw, so the two paths produce identical event
+    distributions by construction."""
+    k_s, k_f, k_o, k_p, k_e, k_j = ks
+    jobs = arrivals.shape[0]
+    # one fused draw for the AZ-shared S block and the private X block
+    # (threefry invocations dominate the batch cost on CPU)
+    sx = unit_draws(k_s, (jobs, A + F, K), dist, cv)
+    s, x = sx[:, :A, :], sx[:, A:, :]
+    oh = jnp.exp(oh_mu + oh_sigma * jax.random.normal(k_o, (jobs, F + 1)))
+    # member 0 pays the arrival overhead; later members a second
+    # control-plane hop (the fork's recursive invocation, §3.3.2)
+    t_oh = oh[:, :1] + jnp.where(jnp.arange(F) == 0, 0.0, oh[:, 1:])
+    # The service mixture for EVERY possible member->AZ placement is
+    # precomputed outside the replay — with the oracle's exact
+    # arithmetic order per element, so the hot loop's one-hot row
+    # select (an exact selection) leaves the blocked core bitwise the
+    # sequential oracle.  (jobs, A, F, K): z_case[j, a, m] = member
+    # m's sequence-ordered attempt times were it placed in AZ a.
+    z_case = (rho * s[:, :, None, :] + (1 - rho) * x[:, None, :, :]) \
+        * means + offset + stage_oh
+    z_case = jnp.take_along_axis(
+        z_case, jnp.broadcast_to(seq, (jobs, A, F, K)), axis=3)
+    # placement tie-break randomness: the scalar sim picks uniformly
+    # among the free (fresh-AZ-preferred) workers.  A deterministic
+    # earliest-free pick keeps flight release pairs perfectly
+    # anti-correlated across AZs and co-location never ignites — the
+    # measured high-load colocation rate collapses to 0 vs the scalar
+    # sim's ~13%, understating the correlation penalty.  One priority
+    # vector per job is enough: members exclude each other's workers,
+    # so the conditional pick stays uniform.
+    prio = jax.random.uniform(k_p, (jobs, W))
+    if fault_mode:
+        # fault mode folds base errors into the per-attempt chain
+        # uniforms — no precomputed outcome bitmap
+        u_err = jax.random.uniform(k_e, (jobs, F, K, R + 1))
+        u_jit = jax.random.uniform(k_j, (jobs, F, K, R))
+        return (arrivals, z_case, t_oh, prio, u_err, u_jit)
+    if fail_prob == 0.0:
+        return (arrivals, z_case, t_oh, prio)
+    fail = jax.random.bernoulli(k_f, fail_prob, (jobs, F, K))
+    fail_seq = jnp.take_along_axis(fail, jnp.broadcast_to(
+        seq, (jobs, F, K)), axis=2)
+    return (arrivals, z_case, fail_seq, t_oh, prio)
+
+
+def _raptor_race_budget(block: int, F: int, K: int, anyfail: bool,
+                        fault_mode: bool, direct: bool, dep_t: tuple):
+    """(race_events, closed_form) for the flight race inside the replay.
+
+    With no injected errors every race event is a distinct task
+    completion, so K completions (+ the F joins when members cannot
+    start mid-attempt) bound the race exactly (dag_flight_trial),
+    and the F=2/K=2 dep-free case (the fig6 hot path) close-forms
+    entirely (_race_f2k2).  The block=1 oracle path keeps the
+    conservative full budget and the generic event scan for every
+    workload; the invariance tests prove both reductions against it.
+    """
+    if block <= 1:
+        return None, False
+    race_events = (K if not anyfail else F * K) + (0 if direct else F)
+    # the closed form knows nothing of inflation/crashes/timeouts,
+    # so fault mode always runs the generic event scan
+    closed_form = (F == 2 and K == 2 and not anyfail and not fault_mode
+                   and direct and not np.asarray(dep_t).any())
+    return race_events, closed_form
+
+
+def _raptor_job_body(*, W, A, F, w_az, seq, dep_mask, slat, direct,
+                     closed_form, race_events, fault_mode, anyfail,
+                     fail_prob, pol, fp, has_failseq, env, trace):
+    """The one-job booking body (HA placement + flight race) the blocked
+    substrate replays — extracted from the whole-trace trial so the
+    streaming scheduler books each microbatch with the *same* closure
+    (bitwise: N microbatched steps carrying the W-state equal one
+    whole-trace replay of the concatenated stream).
+
+    ``env`` is the trial/stream-level fault-table bundle from
+    :func:`_raptor_env` (``None`` outside fault mode)."""
+    if fault_mode:
+        bs_az, be_az, cs_w, ce_w = env
+        bsW = jnp.take(bs_az, w_az, axis=0)            # (W, I) per worker
+        beW = jnp.take(be_az, w_az, axis=0)
+
+    K = seq.shape[1]
+
+    def job_body(wfree, inp):
+        if fault_mode:
+            arrival, zcj, ohj, prj, u_e, u_j = inp
+            fj = jnp.zeros((F, K), dtype=bool)
+            # health snapshot at arrival: a worker is healthy iff its
+            # AZ is not browned out when the flight places (the scalar
+            # sim's _pick_worker_for health tier)
+            hw = ~jnp.any((arrival >= bsW) & (arrival < beW), axis=1)
+        elif not has_failseq:
+            arrival, zcj, ohj, prj = inp
+            fj = jnp.zeros((F, K), dtype=bool)
+        else:
+            arrival, zcj, fj, ohj, prj = inp
+        # HA placement (scalar _pick_worker_for + backlog dispatch).
+        # Free at arrival: pick a uniform-random free worker in an AZ
+        # the flight hasn't used, else a uniform-random free worker.
+        # Queued: the member never chooses — it is handed exactly the
+        # next-released worker, whatever its AZ.  (Giving a queued
+        # member AZ preference among simultaneously-released flight
+        # pairs suppresses the scalar sim's ~13% high-load co-location
+        # and with it the congestion the paper's Kafka-queue regime
+        # shows — see tests/test_sim_queue.py.)
+        # one-hot arithmetic only — vmapped dynamic gathers/scatters
+        # (w_az[w], used_az.at[az], wf.at[w]) cripple the replay
+        wf = wfree
+        fresh = jnp.ones(W, dtype=bool)      # workers in unused AZs
+        t_disp, widx, m_az = [], [], []
+        for m in range(F):
+            t_any = jnp.min(wf)
+            contended = t_any > arrival
+            free = wf <= arrival
+            elig = fresh & free
+            if fault_mode:
+                # health-aware HA: healthy beats fresh beats neither
+                # (a browned-out AZ is skipped while ANY healthy free
+                # worker exists, and placement degrades gracefully to
+                # fewer zones when brownouts leave too few healthy);
+                # random-uniform within each tier, like the non-fault
+                # ranking below
+                key = jnp.where(free, prj + 2.0 * hw + 1.0 * fresh,
+                                -1.0)
+            else:
+                # one argmax: fresh free workers rank in (1, 2], other
+                # free in (0, 1], busy at -1 — random-uniform per tier
+                key = jnp.where(elig, prj + 1.0,
+                                jnp.where(free, prj, -1.0))
+            w = jnp.where(contended, jnp.argmin(wf), jnp.argmax(key))
+            w_hot = jnp.arange(W) == w
+            az = jnp.sum(jnp.where(w_hot, w_az, 0))
+            fresh = fresh & (w_az != az)
+            t_disp.append(jnp.maximum(arrival, t_any))
+            widx.append(w)
+            m_az.append(az)
+            wf = jnp.where(w_hot, jnp.inf, wf)
+        t_disp = jnp.stack(t_disp)
+        widx = jnp.stack(widx)
+        m_az = jnp.stack(m_az)
+        # the AZ-shared S block follows the *actual* placement, so
+        # co-located members (queue pressure) re-correlate like the
+        # scalar sim; one-hot row select, no in-loop gathers
+        az_hot = jnp.arange(A)[:, None] == m_az[None, :]     # (A, F)
+        z_seq = jnp.sum(jnp.where(az_hot[:, :, None], zcj, 0.0),
+                        axis=0)
+        if fault_mode:
+            # per-member fault tables follow the actual placement
+            # (one-hot row selects — same no-gather discipline as the
+            # service mixture above): brownouts of the placed AZ,
+            # crashes of the placed worker
+            wk_hot = jnp.arange(W)[None, :] == widx[:, None]  # (F, W)
+            bs_m = jnp.sum(jnp.where(az_hot[:, :, None],
+                                     bs_az[:, None, :], 0.0), axis=0)
+            be_m = jnp.sum(jnp.where(az_hot[:, :, None],
+                                     be_az[:, None, :], 0.0), axis=0)
+            cs_m = jnp.sum(jnp.where(wk_hot[:, :, None],
+                                     cs_w[None, :, :], 0.0), axis=1)
+            ce_m = jnp.sum(jnp.where(wk_hot[:, :, None],
+                                     ce_w[None, :, :], 0.0), axis=1)
+            recovery = (pol, fp, fail_prob, bs_m, be_m, cs_m, ce_m,
+                        u_e, u_j)
+        else:
+            recovery = None
+        if closed_form:
+            t_resp, ok, t_rel = _race_f2k2(z_seq, t_disp + ohj)
+        else:
+            t_resp, ok, t_rel = dag_flight_trial(
+                z_seq, fj, t_disp + ohj, seq, dep_mask, slat,
+                direct_start=direct, num_events=race_events,
+                no_failures=not anyfail, recovery=recovery)
+        # the max-fold into the free-at vector guards the flight-
+        # finished-before-dispatch case (the scalar sim skips the
+        # dispatch; the worker was never taken); a padded (dead) job
+        # must book nothing, so its releases are gated to -inf
+        live = ~jnp.isinf(arrival)
+        rel = jnp.where(live, t_rel, -jnp.inf)
+        out = (t_resp - arrival, ok)
+        if trace:
+            out = out + (t_disp, widx, t_rel)
+        return (widx, rel), out
+
+    return job_body
+
+
 @functools.lru_cache(maxsize=None)
 def _raptor_trial_fn(jobs: int, W: int, A: int, F: int, K: int,
                      seq_t: tuple, dep_t: tuple, dist: str,
@@ -496,13 +743,13 @@ def _raptor_trial_fn(jobs: int, W: int, A: int, F: int, K: int,
     the race (``dag_flight_trial``'s ``recovery`` bundle).  Both ``None``
     (or disabled/default) compiles EXACTLY the pre-fault path — same key
     splits, same arithmetic, bit-for-bit.
+
+    The draw stage (:func:`_raptor_job_draws`) and the booking body
+    (:func:`_raptor_job_body`) are shared with the streaming scheduler
+    (:func:`_raptor_stream_fns`), which replays the same body microbatch
+    by microbatch on a persistent W-state.
     """
-    fault_mode = ((faults is not None and faults.enabled)
-                  or (policy is not None and not policy.is_default))
-    pol = policy if policy is not None else NO_RECOVERY
-    fp = faults if (faults is not None and faults.enabled) else None
-    anyfail = (can_fail(fail_prob, fp, pol) if fault_mode
-               else fail_prob > 0.0)
+    fault_mode, pol, fp, anyfail = _raptor_mode(fail_prob, faults, policy)
     if not block:
         block = max(1, -(-jobs // 3))   # adaptive log-depth split
     seq = jnp.array(seq_t)
@@ -512,6 +759,8 @@ def _raptor_trial_fn(jobs: int, W: int, A: int, F: int, K: int,
     # can never find its first task already done while the flight still runs
     direct = (not np.asarray(dep_t).any()
               and len({s[0] for s in seq_t}) == F)
+    race_events, closed_form = _raptor_race_budget(
+        block, F, K, anyfail, fault_mode, direct, dep_t)
 
     def trial(key, rate_hz, rho, means, offset, cv, stage_oh, slat,
               oh_mu, oh_sigma):
@@ -520,181 +769,22 @@ def _raptor_trial_fn(jobs: int, W: int, A: int, F: int, K: int,
              k_b, k_c, k_e, k_j) = jax.random.split(key, 9)
         else:
             k_a, k_s, k_f, k_o, k_p = jax.random.split(key, 5)
+            k_b = k_c = k_e = k_j = None
         arrivals = jnp.cumsum(
             jax.random.exponential(k_a, (jobs,)) * (1000.0 / rate_hz))
-        # one fused draw for the AZ-shared S block and the private X block
-        # (threefry invocations dominate the batch cost on CPU)
-        sx = unit_draws(k_s, (jobs, A + F, K), dist, cv)
-        s, x = sx[:, :A, :], sx[:, A:, :]
-        oh = jnp.exp(oh_mu + oh_sigma * jax.random.normal(k_o, (jobs, F + 1)))
-        # member 0 pays the arrival overhead; later members a second
-        # control-plane hop (the fork's recursive invocation, §3.3.2)
-        t_oh = oh[:, :1] + jnp.where(jnp.arange(F) == 0, 0.0, oh[:, 1:])
-        # The service mixture for EVERY possible member->AZ placement is
-        # precomputed outside the replay — with the oracle's exact
-        # arithmetic order per element, so the hot loop's one-hot row
-        # select (an exact selection) leaves the blocked core bitwise the
-        # sequential oracle.  (jobs, A, F, K): z_case[j, a, m] = member
-        # m's sequence-ordered attempt times were it placed in AZ a.
-        z_case = (rho * s[:, :, None, :] + (1 - rho) * x[:, None, :, :]) \
-            * means + offset + stage_oh
-        z_case = jnp.take_along_axis(
-            z_case, jnp.broadcast_to(seq, (jobs, A, F, K)), axis=3)
-        if fail_prob == 0.0 or fault_mode:
-            # fault mode folds base errors into the per-attempt chain
-            # uniforms (u_err below) — no precomputed outcome bitmap
-            fail_seq = None
-        else:
-            fail = jax.random.bernoulli(k_f, fail_prob, (jobs, F, K))
-            fail_seq = jnp.take_along_axis(fail, jnp.broadcast_to(
-                seq, (jobs, F, K)), axis=2)
-        if fault_mode:
-            # exogenous fault environment: one brownout table per AZ, one
-            # crash table per worker, drawn per trial (policy-only mode
-            # rides the inactive [inf, inf) sentinels)
-            if fp is not None:
-                bs_az, be_az = fp.brownout_tables(k_b, A)
-                cs_w, ce_w = fp.crash_tables(k_c, W)
-            else:
-                bs_az = be_az = jnp.full((A, 1), jnp.inf)
-                cs_w = ce_w = jnp.full((W, 1), jnp.inf)
-            bsW = jnp.take(bs_az, w_az, axis=0)        # (W, I) per worker
-            beW = jnp.take(be_az, w_az, axis=0)
-            R = pol.max_retries
-            u_err = jax.random.uniform(k_e, (jobs, F, K, R + 1))
-            u_jit = jax.random.uniform(k_j, (jobs, F, K, R))
-        # with no injected errors every race event is a distinct task
-        # completion, so K completions (+ the F joins when members cannot
-        # start mid-attempt) bound the race exactly (dag_flight_trial),
-        # and the F=2/K=2 dep-free case (the fig6 hot path) close-forms
-        # entirely (_race_f2k2).  The block=1 oracle path keeps the
-        # conservative full budget and the generic event scan for every
-        # workload; the invariance tests prove both reductions against it
-        if block <= 1:
-            race_events, closed_form = None, False
-        else:
-            race_events = ((K if not anyfail else F * K)
-                           + (0 if direct else F))
-            # the closed form knows nothing of inflation/crashes/timeouts,
-            # so fault mode always runs the generic event scan
-            closed_form = (F == 2 and K == 2 and not anyfail
-                           and not fault_mode
-                           and direct and not np.asarray(dep_t).any())
-        # placement tie-break randomness: the scalar sim picks uniformly
-        # among the free (fresh-AZ-preferred) workers.  A deterministic
-        # earliest-free pick keeps flight release pairs perfectly
-        # anti-correlated across AZs and co-location never ignites — the
-        # measured high-load colocation rate collapses to 0 vs the scalar
-        # sim's ~13%, understating the correlation penalty.  One priority
-        # vector per job is enough: members exclude each other's workers,
-        # so the conditional pick stays uniform.
-        prio = jax.random.uniform(k_p, (jobs, W))
-
-        def job_body(wfree, inp):
-            if fault_mode:
-                arrival, zcj, ohj, prj, u_e, u_j = inp
-                fj = jnp.zeros((F, K), dtype=bool)
-                # health snapshot at arrival: a worker is healthy iff its
-                # AZ is not browned out when the flight places (the scalar
-                # sim's _pick_worker_for health tier)
-                hw = ~jnp.any((arrival >= bsW) & (arrival < beW), axis=1)
-            elif fail_seq is None:
-                arrival, zcj, ohj, prj = inp
-                fj = jnp.zeros((F, K), dtype=bool)
-            else:
-                arrival, zcj, fj, ohj, prj = inp
-            # HA placement (scalar _pick_worker_for + backlog dispatch).
-            # Free at arrival: pick a uniform-random free worker in an AZ
-            # the flight hasn't used, else a uniform-random free worker.
-            # Queued: the member never chooses — it is handed exactly the
-            # next-released worker, whatever its AZ.  (Giving a queued
-            # member AZ preference among simultaneously-released flight
-            # pairs suppresses the scalar sim's ~13% high-load co-location
-            # and with it the congestion the paper's Kafka-queue regime
-            # shows — see tests/test_sim_queue.py.)
-            # one-hot arithmetic only — vmapped dynamic gathers/scatters
-            # (w_az[w], used_az.at[az], wf.at[w]) cripple the replay
-            wf = wfree
-            fresh = jnp.ones(W, dtype=bool)      # workers in unused AZs
-            t_disp, widx, m_az = [], [], []
-            for m in range(F):
-                t_any = jnp.min(wf)
-                contended = t_any > arrival
-                free = wf <= arrival
-                elig = fresh & free
-                if fault_mode:
-                    # health-aware HA: healthy beats fresh beats neither
-                    # (a browned-out AZ is skipped while ANY healthy free
-                    # worker exists, and placement degrades gracefully to
-                    # fewer zones when brownouts leave too few healthy);
-                    # random-uniform within each tier, like the non-fault
-                    # ranking below
-                    key = jnp.where(free, prj + 2.0 * hw + 1.0 * fresh,
-                                    -1.0)
-                else:
-                    # one argmax: fresh free workers rank in (1, 2], other
-                    # free in (0, 1], busy at -1 — random-uniform per tier
-                    key = jnp.where(elig, prj + 1.0,
-                                    jnp.where(free, prj, -1.0))
-                w = jnp.where(contended, jnp.argmin(wf), jnp.argmax(key))
-                w_hot = jnp.arange(W) == w
-                az = jnp.sum(jnp.where(w_hot, w_az, 0))
-                fresh = fresh & (w_az != az)
-                t_disp.append(jnp.maximum(arrival, t_any))
-                widx.append(w)
-                m_az.append(az)
-                wf = jnp.where(w_hot, jnp.inf, wf)
-            t_disp = jnp.stack(t_disp)
-            widx = jnp.stack(widx)
-            m_az = jnp.stack(m_az)
-            # the AZ-shared S block follows the *actual* placement, so
-            # co-located members (queue pressure) re-correlate like the
-            # scalar sim; one-hot row select, no in-loop gathers
-            az_hot = jnp.arange(A)[:, None] == m_az[None, :]     # (A, F)
-            z_seq = jnp.sum(jnp.where(az_hot[:, :, None], zcj, 0.0),
-                            axis=0)
-            if fault_mode:
-                # per-member fault tables follow the actual placement
-                # (one-hot row selects — same no-gather discipline as the
-                # service mixture above): brownouts of the placed AZ,
-                # crashes of the placed worker
-                wk_hot = jnp.arange(W)[None, :] == widx[:, None]  # (F, W)
-                bs_m = jnp.sum(jnp.where(az_hot[:, :, None],
-                                         bs_az[:, None, :], 0.0), axis=0)
-                be_m = jnp.sum(jnp.where(az_hot[:, :, None],
-                                         be_az[:, None, :], 0.0), axis=0)
-                cs_m = jnp.sum(jnp.where(wk_hot[:, :, None],
-                                         cs_w[None, :, :], 0.0), axis=1)
-                ce_m = jnp.sum(jnp.where(wk_hot[:, :, None],
-                                         ce_w[None, :, :], 0.0), axis=1)
-                recovery = (pol, fp, fail_prob, bs_m, be_m, cs_m, ce_m,
-                            u_e, u_j)
-            else:
-                recovery = None
-            if closed_form:
-                t_resp, ok, t_rel = _race_f2k2(z_seq, t_disp + ohj)
-            else:
-                t_resp, ok, t_rel = dag_flight_trial(
-                    z_seq, fj, t_disp + ohj, seq, dep_mask, slat,
-                    direct_start=direct, num_events=race_events,
-                    no_failures=not anyfail, recovery=recovery)
-            # the max-fold into the free-at vector guards the flight-
-            # finished-before-dispatch case (the scalar sim skips the
-            # dispatch; the worker was never taken); a padded (dead) job
-            # must book nothing, so its releases are gated to -inf
-            live = ~jnp.isinf(arrival)
-            rel = jnp.where(live, t_rel, -jnp.inf)
-            out = (t_resp - arrival, ok)
-            if trace:
-                out = out + (t_disp, widx, t_rel)
-            return (widx, rel), out
-
-        if fault_mode:
-            events = (arrivals, z_case, t_oh, prio, u_err, u_jit)
-        elif fail_seq is None:
-            events = (arrivals, z_case, t_oh, prio)
-        else:
-            events = (arrivals, z_case, fail_seq, t_oh, prio)
+        events = _raptor_job_draws(
+            (k_s, k_f, k_o, k_p, k_e, k_j), arrivals, W=W, A=A, F=F, K=K,
+            seq=seq, dist=dist, cv=cv, rho=rho, means=means, offset=offset,
+            stage_oh=stage_oh, oh_mu=oh_mu, oh_sigma=oh_sigma,
+            fail_prob=fail_prob, fault_mode=fault_mode, R=pol.max_retries)
+        env = _raptor_env(fp, k_b, k_c, A, W) if fault_mode else None
+        job_body = _raptor_job_body(
+            W=W, A=A, F=F, w_az=w_az, seq=seq, dep_mask=dep_mask, slat=slat,
+            direct=direct, closed_form=closed_form, race_events=race_events,
+            fault_mode=fault_mode, anyfail=anyfail, fail_prob=fail_prob,
+            pol=pol, fp=fp,
+            has_failseq=(fail_prob > 0.0 and not fault_mode), env=env,
+            trace=trace)
         # no padding: the substrate resolves a ragged tail as one final
         # partial block, so phantom jobs never enter the stream
         _, outs = blocked_event_replay(job_body, jnp.zeros(W), events,
@@ -708,6 +798,88 @@ def _raptor_trial_fn(jobs: int, W: int, A: int, F: int, K: int,
         return resp, ok
 
     return trial
+
+
+@functools.lru_cache(maxsize=None)
+def _raptor_stream_fns(W: int, A: int, F: int, K: int, seq_t: tuple,
+                       dep_t: tuple, dist: str, fail_prob: float,
+                       faults: FaultProfile = None,
+                       policy: RecoveryPolicy = None, block: int = 1,
+                       resolver: str = "fixpoint", scan: str = "seq",
+                       summary_backend: str = "xla", trace: bool = False):
+    """(draw_env, draw_events, step) for the streaming scheduler service.
+
+    The streaming engine (:mod:`repro.sim.streaming`) runs open arrivals
+    against a *persistent* device-resident worker free-at vector: the host
+    ingests/draws microbatch ``k+1`` while the device books microbatch
+    ``k``, and only the W-vector survives between steps.  All three
+    returned functions are jit-able and shape-polymorphic in the
+    microbatch length:
+
+    * ``draw_env(key) -> env`` — the stream-level fault-table bundle
+      (:func:`_raptor_env`; drawn ONCE per stream — brownout/crash
+      interval processes are exogenous wall-clock tables, exactly like
+      the whole-trace replay's per-trial draw).  ``None`` outside fault
+      mode.
+    * ``draw_events(key, arrivals, rho, means, offset, cv, stage_oh,
+      oh_mu, oh_sigma) -> events`` — the per-job event tensors for one
+      microbatch of (sorted, absolute-ms) arrival times
+      (:func:`_raptor_job_draws`, the same draw the whole-trace trial
+      performs).  Padded (``inf``) arrivals are dead events: they book
+      nothing and leave the W-state bitwise untouched.
+    * ``step(wf, events, env, slat) -> (wf', outs)`` — book one
+      microbatch through :func:`blocked_event_replay` with the SAME
+      booking body as the whole-trace replay.  Because an event observes
+      earlier events only through the carried W-vector, N consecutive
+      ``step`` calls over slices of a stream are bitwise-identical to one
+      whole-trace replay of the concatenated stream (any block/resolver/
+      scan config; tests/test_streaming.py pins this on runs AND traces,
+      faults on and off).
+    """
+    fault_mode, pol, fp, anyfail = _raptor_mode(fail_prob, faults, policy)
+    seq = jnp.array(seq_t)
+    dep_mask = jnp.array(dep_t)
+    w_az = jnp.arange(W) % A
+    direct = (not np.asarray(dep_t).any()
+              and len({s[0] for s in seq_t}) == F)
+
+    def draw_env(key):
+        if not fault_mode:
+            return None
+        k_b, k_c = jax.random.split(key)
+        return _raptor_env(fp, k_b, k_c, A, W)
+
+    def draw_events(key, arrivals, rho, means, offset, cv, stage_oh,
+                    oh_mu, oh_sigma):
+        k_s, k_f, k_o, k_p, k_e, k_j = jax.random.split(key, 6)
+        return _raptor_job_draws(
+            (k_s, k_f, k_o, k_p, k_e, k_j), arrivals, W=W, A=A, F=F, K=K,
+            seq=seq, dist=dist, cv=cv, rho=rho, means=means, offset=offset,
+            stage_oh=stage_oh, oh_mu=oh_mu, oh_sigma=oh_sigma,
+            fail_prob=fail_prob, fault_mode=fault_mode, R=pol.max_retries)
+
+    def step(wf, events, env, slat):
+        mb = int(jax.tree_util.tree_leaves(events)[0].shape[0])
+        blk = block if block else max(1, -(-mb // 3))
+        race_events, closed_form = _raptor_race_budget(
+            blk, F, K, anyfail, fault_mode, direct, dep_t)
+        job_body = _raptor_job_body(
+            W=W, A=A, F=F, w_az=w_az, seq=seq, dep_mask=dep_mask,
+            slat=slat, direct=direct, closed_form=closed_form,
+            race_events=race_events, fault_mode=fault_mode,
+            anyfail=anyfail, fail_prob=fail_prob, pol=pol, fp=fp,
+            has_failseq=(fail_prob > 0.0 and not fault_mode), env=env,
+            trace=trace)
+        return blocked_event_replay(job_body, wf, events, block=blk,
+                                    resolver=resolver, scan=scan,
+                                    summary_backend=summary_backend)
+
+    # jit HERE, inside the lru-cached factory: every StreamingScheduler
+    # (and every oracle replay) of the same static config shares one
+    # compiled executable instead of recompiling per engine instance.
+    # The W-buffer is donated — the persistent state updates in place.
+    return (draw_env, jax.jit(draw_events),
+            jax.jit(step, donate_argnums=0))
 
 
 @functools.lru_cache(maxsize=None)

@@ -19,6 +19,14 @@ UTIL = {"low": 0.18, "medium": 0.45, "high": 0.75}
 
 def arrival_rate_hz(work_est_ws: float, num_workers: int, load: str) -> float:
     """Poisson arrival rate hitting the UTIL[load] utilisation target."""
+    if load not in UTIL:
+        raise ValueError(
+            f"unknown load {load!r}: expected one of {sorted(UTIL)} "
+            f"(utilisation targets {UTIL})")
+    if work_est_ws <= 0.0:
+        raise ValueError(f"work_est_ws must be positive, got {work_est_ws}")
+    if num_workers <= 0:
+        raise ValueError(f"num_workers must be positive, got {num_workers}")
     return UTIL[load] * num_workers / work_est_ws
 
 # ---- ssh-keygen: two entropy-bound tasks, flight of 2 (Table 8) ----------
