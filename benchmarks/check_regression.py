@@ -30,6 +30,7 @@ TRACKED = [
     (("queue_blocked", "jobs_per_s"), "blocked event-replay queue jobs/s"),
     (("queue_logdepth", "jobs_per_s"), "log-depth summary-chain queue jobs/s"),
     (("dag_wordcount", "jobs_per_s"), "wordcount DAG jobs/s"),
+    (("dag_manifest", "jobs_per_s"), "compiled-manifest ETL DAG jobs/s"),
     (("queue_stock_taskfcfs", "jobs_per_s"), "task-FCFS stock jobs/s"),
     (("queue_faults", "jobs_per_s"), "fault-injected queue jobs/s"),
     (("queue_streaming", "jobs_per_s"), "streaming open-load queue jobs/s"),

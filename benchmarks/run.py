@@ -343,6 +343,46 @@ def bench_sim_vector(trials: int = 10000):
          f"_speedup={d_tps/(sn/ss):.0f}x_cold={d_cold:.1f}s"
          f"_warm={d_warm:.2f}s")
 
+    # ---- dag_manifest: a compiled workload-bank graph, conditionals on -
+    # The ETL pipeline straight from the workflow-manifest compiler
+    # (core/workflow.py): wide transform fan-out behind a data-dependent
+    # validate conditional (poison jobs detour to quarantine via the
+    # mask-select path).  Tracks the compiler->engine route's throughput
+    # at the auto blocked config, and pins the conditional scan's blocked
+    # replay bitwise against the block=1 oracle in-bench — runs AND ok
+    # bits (failure routing is the point of the graph).
+    from repro.sim.vector_queue import etl_queue
+    m_jobs, m_trials = max(trials // 32, 64), 8
+    m_wl = etl_queue()
+    msim = QueueFlightSim(m_wl, load="medium", seed=0, **HA)
+    rm, m_cold, m_warm = cold_warm(
+        lambda: msim.run(m_jobs, m_trials, raptor=True))
+    m_wall = best_of(
+        lambda: msim.run(m_jobs, m_trials,
+                         raptor=True).response_ms.block_until_ready())
+    m_tps = m_jobs * m_trials / m_wall
+    m1sim = QueueFlightSim(m_wl, load="medium", seed=0, block=1, **HA)
+    rm1 = m1sim.run(m_jobs, m_trials, raptor=True)
+    m_exact = bool(
+        np.array_equal(np.asarray(rm.response_ms),
+                       np.asarray(rm1.response_ms))
+        and np.array_equal(np.asarray(rm.ok), np.asarray(rm1.ok)))
+    m_blk, m_res, _ = msim.engine_config("raptor")
+    record["dag_manifest"] = {
+        "graph": m_wl.graph.name, "manifest_hash": m_wl.graph.manifest_hash,
+        "tasks": m_wl.graph.K, "vector_jobs": m_jobs * m_trials,
+        "wall_s": m_wall, "jobs_per_s": m_tps,
+        "compile_cold_s": m_cold, "compile_warm_s": m_warm,
+        "block": m_blk, "resolver": m_res,
+        "bitwise_equals_oracle": m_exact,
+        "mean_ms": rm.summary()["mean"],
+        "fail_rate": rm.summary()["fail_rate"],
+    }
+    _row("sim_dag_manifest", m_wall * 1e6 / (m_jobs * m_trials),
+         f"etl={m_tps:.0f}j/s_block={m_blk}/{m_res}_bitwise={m_exact}"
+         f"_cold={m_cold:.1f}s_warm={m_warm:.2f}s"
+         f"_hash={m_wl.graph.manifest_hash}")
+
     # ---- queue-stock-taskfcfs: the task-granular stock engine ----------
     # wordcount STOCK at util 0.75 (load="high") — the regime the
     # task-FCFS rewrite made faithful (tests/test_sim_queue.py pins the

@@ -8,31 +8,62 @@ index**, reproducing Table 3 exactly.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Sequence, Tuple
+import heapq
+from typing import Dict, List, Mapping, Sequence, Tuple
 
 from repro.core.manifest import ActionManifest
 
 
-def validate_acyclic(manifest: ActionManifest) -> List[str]:
-    """Kahn toposort; raises ValueError on cycles.  Returns one topo order."""
-    deps = {f.name: set(f.dependencies) for f in manifest.functions}
+def kahn_order(dep_map: Mapping[str, Sequence[str]]) -> List[str]:
+    """Kahn's algorithm over a name -> dependencies map: the ONE toposort
+    shared by the scalar and vector paths (manifest validation, the IR's
+    level schedules, the stock stage-depth walk).
+
+    Nodes pop in declaration order among the currently-available set (a
+    heap on declaration index), so the order is deterministic and matches
+    the old per-engine polling loops it replaces.  Raises ``ValueError``
+    **naming one cycle** when the map is not a DAG.
+    """
+    names = list(dep_map)
+    pos = {n: i for i, n in enumerate(names)}
+    remaining = {n: {d for d in dep_map[n] if d != n} for n in names}
+    self_cycle = next((n for n in names if n in dep_map[n]), None)
+    if self_cycle is not None:
+        raise ValueError(
+            f"dependency cycle: {self_cycle} -> {self_cycle}")
+    dependents: Dict[str, List[str]] = {n: [] for n in names}
+    for n, ds in remaining.items():
+        for d in ds:
+            dependents[d].append(n)
+    ready = [pos[n] for n, ds in remaining.items() if not ds]
+    heapq.heapify(ready)
     out: List[str] = []
-    ready = [n for n, d in deps.items() if not d]
-    deps = {n: set(d) for n, d in deps.items()}
-    dependents: Dict[str, List[str]] = {n: [] for n in deps}
-    for n, d in list(deps.items()):
-        for p in d:
-            dependents[p].append(n)
     while ready:
-        n = ready.pop(0)
+        n = names[heapq.heappop(ready)]
         out.append(n)
         for m in dependents[n]:
-            deps[m].discard(n)
-            if not deps[m]:
-                ready.append(m)
-    if len(out) != len(manifest.functions):
-        raise ValueError("manifest DAG has a cycle")
+            remaining[m].discard(n)
+            if not remaining[m]:
+                heapq.heappush(ready, pos[m])
+    if len(out) != len(names):
+        # walk the leftover subgraph until a node repeats: that loop IS
+        # a cycle, and the error names it (start at the first declared
+        # leftover so the message is hash-seed independent)
+        left = {n for n in names if remaining[n]}
+        path, seen, n = [], {}, next(n for n in names if remaining[n])
+        while n not in seen:
+            seen[n] = len(path)
+            path.append(n)
+            n = next(d for d in dep_map[n] if d in left)
+        cyc = path[seen[n]:] + [n]
+        raise ValueError(f"dependency cycle: {' -> '.join(cyc)}")
     return out
+
+
+def validate_acyclic(manifest: ActionManifest) -> List[str]:
+    """Toposort the manifest via :func:`kahn_order`; raises ValueError
+    naming a cycle.  Returns one topo order."""
+    return kahn_order(manifest.dependency_map())
 
 
 def _search_order(manifest: ActionManifest) -> List[str]:

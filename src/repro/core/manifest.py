@@ -41,16 +41,23 @@ class ActionManifest:
                 raise ValueError(f"{f.name}: unknown dependencies {missing}")
         if self.concurrency < 1:
             raise ValueError("concurrency must be >= 1")
+        # a cyclic manifest dies HERE, naming the cycle — not deep inside
+        # an engine's toposort (function-level import: core.dag imports
+        # this module at its top level)
+        from repro.core.dag import kahn_order
+        kahn_order({f.name: f.dependencies for f in self.functions})
+        # name -> spec index for O(1) lookups; written through
+        # object.__setattr__ (frozen dataclass) and excluded from the
+        # generated __eq__/__hash__, which cover declared fields only
+        object.__setattr__(self, "_by_name",
+                           {f.name: f for f in self.functions})
 
     @property
     def names(self) -> Tuple[str, ...]:
         return tuple(f.name for f in self.functions)
 
     def spec(self, name: str) -> FunctionSpec:
-        for f in self.functions:
-            if f.name == name:
-                return f
-        raise KeyError(name)
+        return self._by_name[name]
 
     def dependency_map(self) -> Dict[str, Tuple[str, ...]]:
         return {f.name: f.dependencies for f in self.functions}

@@ -10,7 +10,8 @@ from repro.core.analytics import (forkjoin_failure, raptor_failure,
                                   summarize)
 from repro.sim.cluster import Cluster
 from repro.sim.flights import FlightSim
-from repro.sim.workloads import (UTIL, arrival_rate_hz, keygen_workload,
+from repro.sim.workloads import (UTIL, arrival_rate_hz, etl_workload,
+                                 keygen_workload, mapreduce_workload,
                                  reliability_workload, thumbnail_workload,
                                  wordcount_workload)
 
@@ -171,6 +172,58 @@ def fig7_other_workloads(seed: int = 0, duration_s: float = 1800.0,
         "thumbnail": run_pair(thumbnail_workload, HA, seed=seed,
                               duration_s=duration_s, load=load),
     }
+
+
+def workflow_bank(seed: int = 0, duration_s: float = 600.0,
+                  engine: str = "vector", jobs: int = None,
+                  trials: int = 8, load: str = "medium",
+                  streaming: bool = True) -> Dict:
+    """The spec-compiled workload bank end to end (EXPERIMENTS.md
+    §manifests): the multi-stage ETL pipeline (conditional poison-job
+    quarantine behind the ``validate`` guard) and the ranked map-reduce
+    with a sync barrier, each compiled by :mod:`repro.core.workflow` and
+    replayed through every engine.
+
+    ``engine="vector"`` (default) runs the closed-loop batched queue
+    engine and — when ``streaming=True`` — the open-arrival streaming
+    scheduler with its block=1 oracle identity check; ``"scalar"`` runs
+    the event-driven oracle (same compiled graphs, agreement pinned in
+    tests/test_workflow.py).  Each row carries the graph's
+    ``manifest_hash`` — the compiled-content identity bench records and
+    sweep bucket keys share.
+    """
+    banks = (("etl", etl_workload, None),
+             ("mapreduce", mapreduce_workload, None))
+    if engine == "scalar":
+        out = {}
+        for name, wl_fn, _ in banks:
+            res = run_pair(wl_fn, HA, seed=seed, duration_s=duration_s,
+                           load=load)
+            res["manifest_hash"] = wl_fn().graph.manifest_hash
+            out[name] = res
+        return out
+    from repro.sim.streaming import oracle_check, run_open_load
+    from repro.sim.vector_queue import (QueueFlightSim, etl_queue,
+                                        mapreduce_queue)
+    out = {}
+    for name, _, __ in banks:
+        qwl = etl_queue() if name == "etl" else mapreduce_queue()
+        sim = QueueFlightSim(qwl, load=load, seed=seed, **HA)
+        n = jobs if jobs is not None else max(
+            256, int(sim.rate_hz * duration_s))
+        res = sim.run_pair(n, trials)
+        res["manifest_hash"] = qwl.graph.manifest_hash
+        if streaming:
+            rep = run_open_load(sim, jobs=min(n, 1024), microbatch=64,
+                                seed=seed)
+            res["streaming"] = {
+                "jobs_per_s": rep.jobs_per_s, "mean_ms": rep.mean_ms,
+                "p99_ms": rep.p99_ms, "ok_frac": rep.ok_frac,
+            }
+            res["streaming_bitwise_oracle"] = oracle_check(
+                sim, n_steps=3, microbatch=32)["bitwise"]
+        out[name] = res
+    return out
 
 
 def load_sweep_util(utils=(0.15, 0.3, 0.45, 0.6, 0.75, 0.9), seed: int = 0,

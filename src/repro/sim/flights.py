@@ -36,6 +36,7 @@ from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
+from repro.core.workflow import WorkflowGraph
 from repro.sim.cluster import Cluster
 from repro.sim.events import EventQueue
 from repro.sim.faults import FaultProfile, interval_active_np
@@ -46,20 +47,24 @@ from repro.sim.policies import (NO_RECOVERY, RecoveryPolicy,
 
 @dataclasses.dataclass
 class SimWorkload:
-    """Service-time model of one manifest."""
-    name: str
-    tasks: List[str]
-    deps: Dict[str, tuple]
+    """Service-time model of one compiled manifest.
+
+    ``graph`` is the workflow compiler's IR (:mod:`repro.core.workflow`)
+    — the SAME object the vectorized engines key their compiled trial
+    builders on, so scalar/vector pairs can never disagree on the DAG.
+    """
+    graph: WorkflowGraph
     concurrency: int
     make_draws: Callable                 # cluster -> InvocationDraws
     stock_stage_overhead: float = 0.0    # storage/requeue per stage hop (ms)
     raptor_stage_overhead: float = 0.5   # stream hop (ms)
     fail_prob: float = 0.0
     work_est_ws: float = 2.0             # worker-seconds/job (load targeting)
-    # optional alternative task graph for the STOCK path (workloads whose
-    # stock functions are self-contained, e.g. thumbnail re-downloads)
-    stock_tasks: List[str] = None
-    stock_deps: Dict[str, tuple] = None
+    # optional alternative graph for the STOCK path (workloads whose stock
+    # functions are self-contained, e.g. thumbnail re-downloads); default
+    # is the flight graph with conditionals flattened — the stock baseline
+    # has no data-dependent short-circuiting
+    stock: Optional[WorkflowGraph] = None
     # fault environment + recovery policy carried with the workload so a
     # scalar/vector pair built from the same object injects identically
     # (sim/faults.py, sim/policies.py); constructor kwargs override
@@ -67,12 +72,12 @@ class SimWorkload:
     recovery: Optional[RecoveryPolicy] = None
 
     @property
-    def stock_task_list(self):
-        return self.stock_tasks if self.stock_tasks is not None else self.tasks
+    def name(self) -> str:
+        return self.graph.name
 
     @property
-    def stock_dep_map(self):
-        return self.stock_deps if self.stock_deps is not None else self.deps
+    def stock_graph(self) -> WorkflowGraph:
+        return self.stock if self.stock is not None else self.graph.flatten()
 
 
 @dataclasses.dataclass
@@ -111,6 +116,18 @@ class FlightSim:
         self.free = set(range(cluster.num_workers))
         self.backlog: List = []
         self.jobs: List[JobRecord] = []
+        # cached views of the compiled IR (the hot loops index these)
+        self._deps = wl.graph.dep_map()
+        self._K = wl.graph.K
+        sg = wl.stock_graph
+        self._stock_tasks = list(sg.tasks)
+        self._stock_deps = sg.dep_map()
+        # conditional select masks: guard name -> [(task, sense), ...]
+        self._guards: Dict[str, list] = {}
+        for t, g, s in zip(wl.graph.tasks, wl.graph.cond_guard,
+                           wl.graph.cond_sense):
+            if g >= 0:
+                self._guards.setdefault(wl.graph.tasks[g], []).append((t, s))
         n_seq = max(wl.concurrency, 1) if rotate else 1
         self._seqs = [self._exec_sequence(i) for i in range(n_seq)]
         # fault environment + recovery policy (sim/faults.py, sim/
@@ -191,9 +208,9 @@ class FlightSim:
             self._stock_enqueue_ready(state, overhead)
 
     def _ready(self, done: set) -> List[str]:
-        return [t for t in self.wl.stock_task_list
+        return [t for t in self._stock_tasks
                 if t not in done
-                and all(d in done for d in self.wl.stock_dep_map[t])]
+                and all(d in done for d in self._stock_deps[t])]
 
     def _stock_enqueue_ready(self, state, overhead):
         """Stage hops (control plane + storage round-trips) elapse BEFORE a
@@ -323,7 +340,7 @@ class FlightSim:
         oh = self.wl.stock_stage_overhead + float(
             self.cl.sample_overhead(self.load, 1)[0])
         self._stock_enqueue_ready(state, oh)
-        if len(state["done"]) == len(self.wl.stock_task_list):
+        if len(state["done"]) == len(self._stock_tasks):
             rec.t_done = self.q.now
 
     # ------------------------------------------------------------------
@@ -337,7 +354,7 @@ class FlightSim:
         oh = self.wl.stock_stage_overhead + float(
             self.cl.sample_overhead(self.load, 1)[0])
         self._stock_enqueue_ready(state, oh)
-        if len(state["done"]) == len(self.wl.stock_task_list):
+        if len(state["done"]) == len(self._stock_tasks):
             rec.t_done = self.q.now
         self._dispatch()
 
@@ -382,18 +399,14 @@ class FlightSim:
                 and fl["n_members"] >= max(self.wl.concurrency, 1)
                 and len(fl["parked"]) + len(fl["done_members"])
                 >= fl["n_members"]
-                and len(fl["done"]) < len(self.wl.tasks)):
+                and len(fl["done"]) < self._K):
             fl["rec"].t_done = self.q.now
             fl["rec"].ok = False
             self._finish_flight(fl)
 
     def _exec_sequence(self, index: int) -> List[str]:
         from repro.core.dag import execution_sequence
-        from repro.core.manifest import ActionManifest, FunctionSpec
-        man = ActionManifest(
-            tuple(FunctionSpec(t, None, tuple(self.wl.deps[t]))
-                  for t in self.wl.tasks),
-            concurrency=max(self.wl.concurrency, 1), name=self.wl.name)
+        man = self.wl.graph.to_manifest(max(self.wl.concurrency, 1))
         return execution_sequence(man, index)
 
     def _member_next(self, fl, w):
@@ -406,7 +419,7 @@ class FlightSim:
             if task in fl["done"]:
                 ptr += 1
                 continue
-            if all(d in fl["done"] for d in self.wl.deps[task]):
+            if all(d in fl["done"] for d in self._deps[task]):
                 break
             # dependency not yet visible on the stream: park until a
             # completion broadcast re-wakes us half an RTT later.  Event-
@@ -454,7 +467,8 @@ class FlightSim:
         fl["running"].pop(w, None)
         fl["rec"].work_ms += self.q.now - t0
         fl["ptr"][w] += 1
-        if fail:
+        guard = task in self._guards
+        if fail and not guard:
             # §3.3.4: the error event is broadcast and IGNORED by peers; the
             # member moves on.  The task stays pending for other members.
             fl["failed_members"].add(w)
@@ -462,6 +476,17 @@ class FlightSim:
             return
         if task not in fl["done"]:
             fl["done"][task] = self.q.now
+            if guard:
+                # conditional mask-select: the guard's FIRST finished
+                # attempt decides the branch — failure is a routing
+                # outcome, not a job error.  Tasks gated on the other
+                # sense are cancelled: marked complete with zero service
+                # (they structurally depend on the guard, so none can be
+                # mid-attempt here), and their dependents wake below.
+                outcome = not fail
+                for t, sense in self._guards[task]:
+                    if sense != outcome and t not in fl["done"]:
+                        fl["done"][t] = self.q.now
             # broadcast: preempt peers running `task` (half-RTT delivery)
             for pw, (ptask, eid, pt0) in list(fl["running"].items()):
                 if ptask == task:
@@ -476,7 +501,7 @@ class FlightSim:
             for pw in list(fl["parked"]):
                 fl["parked"].discard(pw)
                 self._wake(fl, pw, self.slat)
-        if len(fl["done"]) == len(self.wl.tasks):
+        if len(fl["done"]) == self._K:
             fl["rec"].t_done = self.q.now
             fl["rec"].ok = True
             self._finish_flight(fl)

@@ -102,9 +102,7 @@ class StreamingScheduler:
         blk, res, sc = sim.engine_config("raptor")
         self.config = (blk, res, sc)
         self._fns = _raptor_stream_fns(
-            sim.W, sim.A, sim.flight, len(sim.wl.tasks),
-            tuple(map(tuple, sim._seq.tolist())),
-            tuple(map(tuple, sim._dep.tolist())),
+            sim.W, sim.A, sim.flight, sim.wl.graph,
             sim.wl.dist, sim.wl.fail_prob, sim._fp, sim._policy,
             blk, res, sc, sim.summary_backend, trace)
         # draw_events/step arrive pre-jitted from the lru-cached factory
@@ -229,9 +227,7 @@ def oracle_check(sim: QueueFlightSim, *, n_steps: int = 6,
     streamed = (eng.drain_trace() if trace else eng.drain())
     events = eng.concatenated_events()
     _, _, oracle_step = _raptor_stream_fns(
-        sim.W, sim.A, sim.flight, len(sim.wl.tasks),
-        tuple(map(tuple, sim._seq.tolist())),
-        tuple(map(tuple, sim._dep.tolist())),
+        sim.W, sim.A, sim.flight, sim.wl.graph,
         sim.wl.dist, sim.wl.fail_prob, sim._fp, sim._policy,
         1, "fixpoint", "seq", sim.summary_backend, trace)
     _, outs = oracle_step(jnp.zeros(sim.W), events, eng.env, sim.slat)
@@ -319,16 +315,16 @@ def stock_open_sojourns(sim: QueueFlightSim, arrivals_ms,
     (EXPERIMENTS.md §streaming's raptor-vs-stock table).
     """
     wl = sim.wl
-    s_tasks, s_means, s_deps = wl.stock_graph()
-    if any(len(d) for d in s_deps):
+    sg = wl.stock_graph()
+    if sg.has_deps:
         raise ValueError(
             "stock_open_sojourns handles dep-free stock graphs only; "
             f"{wl.name!r} has staged dependencies — use the whole-trace "
             "stock engine")
     arr = np.asarray(arrivals_ms, dtype=np.float64)
     rng = np.random.default_rng(seed)
-    K = len(s_tasks)
-    means = np.asarray(s_means, dtype=np.float64)
+    K = sg.K
+    means = np.asarray(sg.means, dtype=np.float64)
     extras = np.asarray(wl.stock_extras(), dtype=np.float64)
 
     def unit(n):

@@ -302,12 +302,12 @@ def open_loop_pair_plan(wl: VectorWorkload, configs, *, trials: int = 20_000,
 # of serializing on per-config host round-trips.
 
 @functools.lru_cache(maxsize=None)
-def _queue_raptor_core(jobs, W, A, F, K, seq_t, dep_t, dist, fail_prob,
+def _queue_raptor_core(jobs, W, A, F, graph, dist, fail_prob,
                        faults, policy, block, resolver, scan,
                        summary_backend):
     from repro.core.analytics import summarize_masked_batch
     from repro.sim.vector_queue import _raptor_trial_fn
-    trial = _raptor_trial_fn(jobs, W, A, F, K, seq_t, dep_t, dist, fail_prob,
+    trial = _raptor_trial_fn(jobs, W, A, F, graph, dist, fail_prob,
                              faults, policy, block, resolver, scan,
                              summary_backend)
 
@@ -322,12 +322,12 @@ def _queue_raptor_core(jobs, W, A, F, K, seq_t, dep_t, dist, fail_prob,
 
 
 @functools.lru_cache(maxsize=None)
-def _queue_stock_core(jobs, W, A, K, dep_t, dist, fail_prob, faults,
+def _queue_stock_core(jobs, W, A, graph, dist, fail_prob, faults,
                       policy, passes, has_extras, block, backend,
                       resolver, scan, summary_backend):
     from repro.core.analytics import summarize_masked_batch
     from repro.sim.vector_queue import _stock_trial_fn
-    trial = _stock_trial_fn(jobs, W, A, K, dep_t, dist, fail_prob,
+    trial = _stock_trial_fn(jobs, W, A, graph, dist, fail_prob,
                             faults, policy, passes, has_extras, block,
                             backend, resolver, scan, summary_backend)
 
@@ -379,9 +379,7 @@ def queue_pair_plan(sims, jobs: int, trials: int) -> SweepPlan:
         SweepTask(
             "raptor", all_idx,
             _queue_raptor_core(
-                int(jobs), s0.W, s0.A, s0.flight, len(wl.tasks),
-                tuple(map(tuple, s0._seq.tolist())),
-                tuple(map(tuple, s0._dep.tolist())),
+                int(jobs), s0.W, s0.A, s0.flight, wl.graph,
                 wl.dist, wl.fail_prob, s0._fp, s0._policy,
                 r_blk, r_res, r_scan, s0.summary_backend),
             s0._keys(trials, True),
@@ -391,8 +389,7 @@ def queue_pair_plan(sims, jobs: int, trials: int) -> SweepPlan:
         SweepTask(
             "stock", all_idx,
             _queue_stock_core(
-                int(jobs), s0.W, s0.A, len(s0._smeans),
-                tuple(map(tuple, s0._sdep.tolist())),
+                int(jobs), s0.W, s0.A, s0._sgraph,
                 wl.dist, wl.fail_prob, s0._fp, s0._policy, s0._spasses,
                 bool(s0._sextras.any()), s_blk, s0.booking_backend,
                 s_res, s_scan, s0.summary_backend),

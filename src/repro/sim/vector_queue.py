@@ -84,6 +84,7 @@ import numpy as np
 from jax import lax
 
 from repro.core.analytics import summarize_batch
+from repro.core.workflow import WorkflowGraph, compile_spec, fanout, task
 from repro.sim.cluster import OverheadModel, lognormal_params
 from repro.sim.faults import (FaultProfile, first_start_in, interval_active,
                               push_out)
@@ -92,35 +93,37 @@ from repro.sim.policies import (NO_RECOVERY, RecoveryPolicy, can_fail,
 from repro.sim.scan_core import (blocked_bestfit_booking,
                                  blocked_event_replay, stock_booking_fins)
 from repro.sim.vector import unit_draws
-from repro.sim.workloads import (KEYGEN_CV, KEYGEN_MEAN_MS, KEYGEN_OFFSET_MS,
-                                 THUMB_CV, THUMB_DOWNLOAD_MS, THUMB_RESIZE_MS,
-                                 WC_MAP_MS, WC_REDUCE_MS, WC_SPLIT_MS,
-                                 WC_STORAGE_HOP_MS)
+from repro.sim.workloads import (ETL_QUARANTINE_MS, KEYGEN_CV,
+                                 KEYGEN_OFFSET_MS, THUMB_CV,
+                                 THUMB_DOWNLOAD_MS, WC_STORAGE_HOP_MS,
+                                 etl_graph, keygen_graph, mapreduce_graph,
+                                 thumbnail_graph, thumbnail_stock_graph,
+                                 wordcount_graph)
 from repro.sim.workloads import arrival_rate_hz as _rate_for_load
 
 
 @dataclasses.dataclass(frozen=True)
 class QueueWorkload:
-    """One manifest as dense per-task tensors (raptor + stock task graphs).
+    """One compiled manifest bound to the vector engines' service model.
 
-    ``deps`` maps task -> tuple of prerequisite tasks (the flight manifest);
-    the stock graph may differ (thumbnail's stock functions re-download the
-    source, so its task list drops the shared download stage and each task
-    pays ``stock_extra_means`` as a second independent service draw).
+    ``graph`` is the workflow compiler's IR (:mod:`repro.core.workflow`):
+    frozen and hashable, it IS the static key the cached trial builders
+    and sweep bucket cores compile against — per-member sequences,
+    dependency masks, and conditional select masks all derive from it.
+    The stock graph may differ (thumbnail's stock functions re-download
+    the source, so its task list drops the shared download stage and each
+    task pays ``stock_extra_means`` as a second independent service
+    draw); conditionals are always flattened for stock — the baseline has
+    no data-dependent short-circuiting.
     """
-    name: str
-    tasks: Tuple[str, ...]
-    task_means: Tuple[float, ...]
-    deps: Tuple[Tuple[str, ...], ...]       # aligned with ``tasks``
+    graph: WorkflowGraph
     flight: int
-    dist: str = "exp"                       # "exp" | "lognorm"
+    dist: str = "exp"                       # "exp" | "lognorm" | "pareto"
     cv: float = 1.0
     offset_ms: float = 0.0
     raptor_stage_ms: float = 0.5            # stream hop per attempt
-    stock_tasks: Tuple[str, ...] = None
-    stock_means: Tuple[float, ...] = None
+    stock: WorkflowGraph = None             # alternative stock-path graph
     stock_extra_means: Tuple[float, ...] = None
-    stock_deps: Tuple[Tuple[str, ...], ...] = None
     stock_stage_ms: float = 0.0             # storage round-trip per stage hop
     fail_prob: float = 0.0
     work_est_ws: float = 2.0
@@ -130,15 +133,25 @@ class QueueWorkload:
     faults: FaultProfile = None
     recovery: RecoveryPolicy = None
 
-    def stock_graph(self):
-        if self.stock_tasks is None:
-            return self.tasks, self.task_means, self.deps
-        return self.stock_tasks, self.stock_means, self.stock_deps
+    @property
+    def name(self) -> str:
+        return self.graph.name
+
+    @property
+    def tasks(self) -> Tuple[str, ...]:
+        return self.graph.tasks
+
+    @property
+    def task_means(self) -> Tuple[float, ...]:
+        return self.graph.means
+
+    def stock_graph(self) -> WorkflowGraph:
+        g = self.stock if self.stock is not None else self.graph
+        return g.flatten()
 
     def stock_extras(self) -> Tuple[float, ...]:
-        tasks = self.stock_graph()[0]
         if self.stock_extra_means is None:
-            return (0.0,) * len(tasks)
+            return (0.0,) * self.stock_graph().K
         return self.stock_extra_means
 
 
@@ -146,8 +159,7 @@ def keygen_queue(fail_prob: float = 0.0, faults: FaultProfile = None,
                  recovery: RecoveryPolicy = None) -> QueueWorkload:
     """ssh-keygen: two independent entropy-bound tasks, flight of 2."""
     return QueueWorkload(
-        "ssh-keygen", ("keygen_a", "keygen_b"),
-        (KEYGEN_MEAN_MS, KEYGEN_MEAN_MS), ((), ()), flight=2,
+        keygen_graph(), flight=2,
         dist="lognorm", cv=KEYGEN_CV, offset_ms=KEYGEN_OFFSET_MS,
         fail_prob=fail_prob, work_est_ws=1.9,
         faults=faults, recovery=recovery)
@@ -156,10 +168,7 @@ def keygen_queue(fail_prob: float = 0.0, faults: FaultProfile = None,
 def wordcount_queue(fail_prob: float = 0.0, faults: FaultProfile = None,
                     recovery: RecoveryPolicy = None) -> QueueWorkload:
     """Map-reduce: split -> 4 maps -> reduce; stock pays the S3 hop."""
-    tasks = ("split", "map0", "map1", "map2", "map3", "reduce")
-    means = (WC_SPLIT_MS,) + (WC_MAP_MS,) * 4 + (WC_REDUCE_MS,)
-    deps = ((),) + (("split",),) * 4 + (("map0", "map1", "map2", "map3"),)
-    return QueueWorkload("wordcount", tasks, means, deps, flight=2,
+    return QueueWorkload(wordcount_graph(), flight=2,
                          dist="exp", stock_stage_ms=WC_STORAGE_HOP_MS,
                          fail_prob=fail_prob, work_est_ws=4.2,
                          faults=faults, recovery=recovery)
@@ -168,16 +177,43 @@ def wordcount_queue(fail_prob: float = 0.0, faults: FaultProfile = None,
 def thumbnail_queue(fail_prob: float = 0.0, faults: FaultProfile = None,
                     recovery: RecoveryPolicy = None) -> QueueWorkload:
     """Download + 4 resizes; stock functions each re-download the source."""
-    thumbs = tuple(f"thumb{i}" for i in range(4))
     return QueueWorkload(
-        "thumbnail", ("download",) + thumbs,
-        (THUMB_DOWNLOAD_MS,) + (THUMB_RESIZE_MS,) * 4,
-        ((),) + (("download",),) * 4, flight=4,
+        thumbnail_graph(), flight=4,
         dist="lognorm", cv=THUMB_CV,
-        stock_tasks=thumbs, stock_means=(THUMB_RESIZE_MS,) * 4,
+        stock=thumbnail_stock_graph(),
         stock_extra_means=(THUMB_DOWNLOAD_MS,) * 4,
-        stock_deps=((),) * 4, fail_prob=fail_prob, work_est_ws=5.6,
+        fail_prob=fail_prob, work_est_ws=5.6,
         faults=faults, recovery=recovery)
+
+
+def etl_queue(rank: int = 6, fail_prob: float = 0.08,
+              faults: FaultProfile = None,
+              recovery: RecoveryPolicy = None) -> QueueWorkload:
+    """Workload-bank ETL pipeline (see :func:`repro.sim.workloads
+    .etl_graph`): wide transform fan-out behind a ``validate`` guard
+    whose outcome routes poison jobs to quarantine — the conditional
+    mask-select path of the compiled IR.  ``fail_prob`` doubles as the
+    poison rate."""
+    g = etl_graph(rank)
+    work = (sum(g.means) - ETL_QUARANTINE_MS) / 1000.0
+    return QueueWorkload(g, flight=3, dist="exp",
+                         stock_stage_ms=WC_STORAGE_HOP_MS,
+                         fail_prob=fail_prob, work_est_ws=work,
+                         faults=faults, recovery=recovery)
+
+
+def mapreduce_queue(rank: int = 4, reducers: int = 2,
+                    fail_prob: float = 0.0,
+                    faults: FaultProfile = None,
+                    recovery: RecoveryPolicy = None) -> QueueWorkload:
+    """Workload-bank ranked map-reduce with a sync barrier (see
+    :func:`repro.sim.workloads.mapreduce_graph`)."""
+    g = mapreduce_graph(rank, reducers)
+    return QueueWorkload(g, flight=3, dist="exp",
+                         stock_stage_ms=WC_STORAGE_HOP_MS,
+                         fail_prob=fail_prob,
+                         work_est_ws=sum(g.means) / 1000.0,
+                         faults=faults, recovery=recovery)
 
 
 def heavytail_queue(num_tasks: int = 2, mean_ms: float = 1000.0,
@@ -199,9 +235,9 @@ def heavytail_queue(num_tasks: int = 2, mean_ms: float = 1000.0,
     if cv <= 0.0:
         raise ValueError(f"cv must be positive, got {cv}")
     return QueueWorkload(
-        f"{dist}{num_tasks}", tuple(f"t{i}" for i in range(num_tasks)),
-        (mean_ms,) * num_tasks, ((),) * num_tasks, flight=flight,
-        dist=dist, cv=cv, fail_prob=fail_prob,
+        compile_spec(fanout(task("t", mean_ms), num_tasks),
+                     name=f"{dist}{num_tasks}"),
+        flight=flight, dist=dist, cv=cv, fail_prob=fail_prob,
         work_est_ws=num_tasks * mean_ms / 1000.0,
         faults=faults, recovery=recovery)
 
@@ -212,51 +248,11 @@ def exponential_queue(num_tasks: int = 2, mean_ms: float = 1000.0,
                       recovery: RecoveryPolicy = None) -> QueueWorkload:
     """Pure exp(mu) independent tasks — the §4.2.1 theory's hypothesis."""
     return QueueWorkload(
-        f"exp{num_tasks}", tuple(f"t{i}" for i in range(num_tasks)),
-        (mean_ms,) * num_tasks, ((),) * num_tasks, flight=flight,
-        dist="exp", fail_prob=fail_prob,
+        compile_spec(fanout(task("t", mean_ms), num_tasks),
+                     name=f"exp{num_tasks}"),
+        flight=flight, dist="exp", fail_prob=fail_prob,
         work_est_ws=num_tasks * mean_ms / 1000.0,
         faults=faults, recovery=recovery)
-
-
-# --------------------------------------------------------------------------
-# host-side manifest prep (sequences + dependency masks)
-# --------------------------------------------------------------------------
-
-def _dep_mask(tasks, deps) -> np.ndarray:
-    idx = {t: i for i, t in enumerate(tasks)}
-    m = np.zeros((len(tasks), len(tasks)), dtype=bool)
-    for t, ds in zip(tasks, deps):
-        for d in ds:
-            m[idx[t], idx[d]] = True
-    return m
-
-
-def _member_sequences(wl: QueueWorkload, flight: int) -> np.ndarray:
-    """(F, K) member task orders — the scalar sim's exact §3.3.3 sequences
-    (``core.dag.execution_sequence`` shift-at-scan-level linearisation)."""
-    from repro.core.dag import execution_sequence
-    from repro.core.manifest import ActionManifest, FunctionSpec
-    man = ActionManifest(
-        tuple(FunctionSpec(t, None, tuple(d))
-              for t, d in zip(wl.tasks, wl.deps)),
-        concurrency=max(flight, 1), name=wl.name)
-    idx = {t: i for i, t in enumerate(wl.tasks)}
-    return np.array([[idx[t] for t in execution_sequence(man, m)]
-                     for m in range(flight)])
-
-
-def _topo_order(dep_mask: np.ndarray):
-    order, done = [], set()
-    while len(order) < dep_mask.shape[0]:
-        for t in range(dep_mask.shape[0]):
-            if t not in done and all(d in done for d in np.where(dep_mask[t])[0]):
-                order.append(t)
-                done.add(t)
-                break
-        else:  # pragma: no cover - guarded by manifest validation
-            raise ValueError("cyclic stock task graph")
-    return tuple(order)
 
 
 # --------------------------------------------------------------------------
@@ -265,7 +261,7 @@ def _topo_order(dep_mask: np.ndarray):
 
 def dag_flight_trial(z_seq, fail_seq, t_join, seq, dep_mask, slat,
                      direct_start: bool = False, num_events: int = None,
-                     no_failures: bool = False, recovery=None):
+                     no_failures: bool = False, recovery=None, cond=None):
     """Replay one flight of a (possibly DAG) manifest.
 
     Like ``sim.vector._flight_trial`` but members must respect ``dep_mask``
@@ -310,6 +306,15 @@ def dag_flight_trial(z_seq, fail_seq, t_join, seq, dep_mask, slat,
     stays busy for the whole chain, and the first-success broadcast
     preempts a chain as a unit.  ``fail_seq`` is ignored in this mode
     (errors live in the fold's uniforms).
+
+    ``cond`` (optional, static) is the compiled IR's conditional select
+    pair ``(cond_guard, cond_sense)`` — per-task guard index (-1 =
+    unconditional) and required guard outcome.  A guard task completes
+    on its FIRST finished attempt whether or not that attempt erred
+    (the error is the branch OUTCOME, not a job failure), and the same
+    event mask-cancels every task gated on the opposite outcome: losers
+    are marked done without consuming events, so the race budgets above
+    still hold and the flight completes when the winning arm does.
     """
     F, K = z_seq.shape
     if recovery is not None:
@@ -318,6 +323,15 @@ def dag_flight_trial(z_seq, fail_seq, t_join, seq, dep_mask, slat,
     # dep_mask is a trace-time constant (the manifest), so a dep-free
     # workload statically elides the runnable computation below
     has_deps = bool(np.asarray(dep_mask).any())
+    # likewise the conditional select masks: cond=None (or all -1)
+    # compiles the exact pre-conditional jaxpr
+    has_cond = cond is not None and any(g >= 0 for g in cond[0])
+    if has_cond:
+        c_gated = jnp.array([g >= 0 for g in cond[0]])
+        c_guard = jnp.array([g if g >= 0 else 0 for g in cond[0]])
+        c_sense = jnp.array(list(cond[1]))
+        c_is_guard = jnp.array(
+            [k in {g for g in cond[0] if g >= 0} for k in range(K)])
     k_ar = jnp.arange(K)
     done0 = jnp.zeros(K, dtype=bool)
     released0 = jnp.zeros((F,), dtype=bool)
@@ -340,16 +354,28 @@ def dag_flight_trial(z_seq, fail_seq, t_join, seq, dep_mask, slat,
         fin0 = t_join
     if no_failures:
         attempted0 = None         # implied by `done` (see docstring)
+    outcome0 = jnp.zeros(K, dtype=bool) if has_cond else None
 
     def step(carry, _):
-        (done, attempted, cur, curfail, fin, released, trel,
+        (done, attempted, outcome, cur, curfail, fin, released, trel,
          finished, ok, t_resp) = carry
         t = jnp.min(fin)
         e_hot = jnp.arange(F) == jnp.argmin(fin)
         any_busy = ~jnp.isinf(t)
         task = jnp.sum(jnp.where(e_hot, cur, 0))      # -1 on a join event
-        succ = any_busy & (task >= 0) & ~jnp.any(curfail & e_hot)
+        raw_ok = ~jnp.any(curfail & e_hot)
+        succ = any_busy & (task >= 0) & raw_ok
+        if has_cond:
+            # a guard's first finished attempt COMPLETES it either way;
+            # the attempt's error bit becomes the recorded branch outcome
+            ev_guard = jnp.any((k_ar == task) & c_is_guard)
+            succ = succ | (any_busy & (task >= 0) & ev_guard)
+            outcome = jnp.where((k_ar == task) & succ, raw_ok, outcome)
         done2 = done | ((k_ar == task) & succ)
+        if has_cond:
+            # mask-select: cancel the arm gated on the opposite outcome
+            cancel = c_gated & done2[c_guard] & (outcome[c_guard] != c_sense)
+            done2 = done2 | cancel
         busy = ~jnp.isinf(fin)
         # first-success broadcast preempts peers mid-`task` (§3.3.4)
         preempted = succ & (cur == task) & busy & ~e_hot
@@ -404,18 +430,18 @@ def dag_flight_trial(z_seq, fail_seq, t_join, seq, dep_mask, slat,
         # inf (so t = inf and nothing can start or newly release), done/
         # attempted/released are monotone, and the ok/t_resp outputs latch
         # on `terminal`, which `finished` stops from refiring
-        carry2 = (done2, attempted2, cur2, curfail2, fin2, released2,
-                  trel2, finished | terminal,
+        carry2 = (done2, attempted2, outcome, cur2, curfail2, fin2,
+                  released2, trel2, finished | terminal,
                   jnp.where(terminal, complete, ok),
                   jnp.where(terminal, t, t_resp))
         return carry2, None
 
-    carry0 = (done0, attempted0, cur0, curfail0, fin0, released0, trel0,
-              jnp.array(False), jnp.array(False), jnp.array(jnp.inf))
+    carry0 = (done0, attempted0, outcome0, cur0, curfail0, fin0, released0,
+              trel0, jnp.array(False), jnp.array(False), jnp.array(jnp.inf))
     # F join events (unless direct_start) + at most F*K attempt completions
     steps = (int(num_events) if num_events is not None
              else (F * K if direct_start else F * (K + 1)))
-    (_, _, _, _, _, _, trel, _, ok, t_resp), _ = lax.scan(
+    (_, _, _, _, _, _, _, trel, _, ok, t_resp), _ = lax.scan(
         step, carry0, None, length=steps, unroll=min(steps, 8))
     return t_resp, ok, trel
 
@@ -567,7 +593,7 @@ def _raptor_job_draws(ks, arrivals, *, W, A, F, K, seq, dist, cv, rho,
 
 
 def _raptor_race_budget(block: int, F: int, K: int, anyfail: bool,
-                        fault_mode: bool, direct: bool, dep_t: tuple):
+                        fault_mode: bool, direct: bool, has_deps: bool):
     """(race_events, closed_form) for the flight race inside the replay.
 
     With no injected errors every race event is a distinct task
@@ -584,13 +610,14 @@ def _raptor_race_budget(block: int, F: int, K: int, anyfail: bool,
     # the closed form knows nothing of inflation/crashes/timeouts,
     # so fault mode always runs the generic event scan
     closed_form = (F == 2 and K == 2 and not anyfail and not fault_mode
-                   and direct and not np.asarray(dep_t).any())
+                   and direct and not has_deps)
     return race_events, closed_form
 
 
 def _raptor_job_body(*, W, A, F, w_az, seq, dep_mask, slat, direct,
                      closed_form, race_events, fault_mode, anyfail,
-                     fail_prob, pol, fp, has_failseq, env, trace):
+                     fail_prob, pol, fp, has_failseq, env, trace,
+                     cond=None):
     """The one-job booking body (HA placement + flight race) the blocked
     substrate replays — extracted from the whole-trace trial so the
     streaming scheduler books each microbatch with the *same* closure
@@ -693,7 +720,7 @@ def _raptor_job_body(*, W, A, F, w_az, seq, dep_mask, slat, direct,
             t_resp, ok, t_rel = dag_flight_trial(
                 z_seq, fj, t_disp + ohj, seq, dep_mask, slat,
                 direct_start=direct, num_events=race_events,
-                no_failures=not anyfail, recovery=recovery)
+                no_failures=not anyfail, recovery=recovery, cond=cond)
         # the max-fold into the free-at vector guards the flight-
         # finished-before-dispatch case (the scalar sim skips the
         # dispatch; the worker was never taken); a padded (dead) job
@@ -709,13 +736,18 @@ def _raptor_job_body(*, W, A, F, w_az, seq, dep_mask, slat, direct,
 
 
 @functools.lru_cache(maxsize=None)
-def _raptor_trial_fn(jobs: int, W: int, A: int, F: int, K: int,
-                     seq_t: tuple, dep_t: tuple, dist: str,
+def _raptor_trial_fn(jobs: int, W: int, A: int, F: int,
+                     graph: WorkflowGraph, dist: str,
                      fail_prob: float, faults: FaultProfile = None,
                      policy: RecoveryPolicy = None, block: int = 1,
                      resolver: str = "fixpoint", scan: str = "seq",
                      summary_backend: str = "xla", trace: bool = False):
-    """Per-trial closed-loop raptor replay, closed over the static manifest.
+    """Per-trial closed-loop raptor replay, closed over the compiled IR.
+
+    ``graph`` (a frozen :class:`repro.core.workflow.WorkflowGraph`) IS
+    the static manifest key: member sequences, the dependency mask, and
+    the conditional select masks all derive from it here, so
+    content-equal compiled graphs share one cached executable.
 
     Traced args: arrival rate, rho, per-task means, offset, cv, stage
     overhead, stream latency, and the Table-6 lognormal (mu, sigma) — so a
@@ -752,15 +784,18 @@ def _raptor_trial_fn(jobs: int, W: int, A: int, F: int, K: int,
     fault_mode, pol, fp, anyfail = _raptor_mode(fail_prob, faults, policy)
     if not block:
         block = max(1, -(-jobs // 3))   # adaptive log-depth split
-    seq = jnp.array(seq_t)
-    dep_mask = jnp.array(dep_t)
+    K = graph.K
+    seq_np = graph.member_sequences(F)
+    seq = jnp.array(seq_np)
+    dep_mask = jnp.array(graph.dep_mask())
+    cond = graph.cond_static
     w_az = jnp.arange(W) % A
     # members may begin mid-attempt (no join events) only if a late joiner
     # can never find its first task already done while the flight still runs
-    direct = (not np.asarray(dep_t).any()
-              and len({s[0] for s in seq_t}) == F)
+    direct = (not graph.has_deps
+              and len({int(s) for s in seq_np[:, 0]}) == F)
     race_events, closed_form = _raptor_race_budget(
-        block, F, K, anyfail, fault_mode, direct, dep_t)
+        block, F, K, anyfail, fault_mode, direct, graph.has_deps)
 
     def trial(key, rate_hz, rho, means, offset, cv, stage_oh, slat,
               oh_mu, oh_sigma):
@@ -784,7 +819,7 @@ def _raptor_trial_fn(jobs: int, W: int, A: int, F: int, K: int,
             fault_mode=fault_mode, anyfail=anyfail, fail_prob=fail_prob,
             pol=pol, fp=fp,
             has_failseq=(fail_prob > 0.0 and not fault_mode), env=env,
-            trace=trace)
+            trace=trace, cond=cond)
         # no padding: the substrate resolves a ragged tail as one final
         # partial block, so phantom jobs never enter the stream
         _, outs = blocked_event_replay(job_body, jnp.zeros(W), events,
@@ -801,8 +836,8 @@ def _raptor_trial_fn(jobs: int, W: int, A: int, F: int, K: int,
 
 
 @functools.lru_cache(maxsize=None)
-def _raptor_stream_fns(W: int, A: int, F: int, K: int, seq_t: tuple,
-                       dep_t: tuple, dist: str, fail_prob: float,
+def _raptor_stream_fns(W: int, A: int, F: int, graph: WorkflowGraph,
+                       dist: str, fail_prob: float,
                        faults: FaultProfile = None,
                        policy: RecoveryPolicy = None, block: int = 1,
                        resolver: str = "fixpoint", scan: str = "seq",
@@ -837,11 +872,14 @@ def _raptor_stream_fns(W: int, A: int, F: int, K: int, seq_t: tuple,
       faults on and off).
     """
     fault_mode, pol, fp, anyfail = _raptor_mode(fail_prob, faults, policy)
-    seq = jnp.array(seq_t)
-    dep_mask = jnp.array(dep_t)
+    K = graph.K
+    seq_np = graph.member_sequences(F)
+    seq = jnp.array(seq_np)
+    dep_mask = jnp.array(graph.dep_mask())
+    cond = graph.cond_static
     w_az = jnp.arange(W) % A
-    direct = (not np.asarray(dep_t).any()
-              and len({s[0] for s in seq_t}) == F)
+    direct = (not graph.has_deps
+              and len({int(s) for s in seq_np[:, 0]}) == F)
 
     def draw_env(key):
         if not fault_mode:
@@ -862,14 +900,14 @@ def _raptor_stream_fns(W: int, A: int, F: int, K: int, seq_t: tuple,
         mb = int(jax.tree_util.tree_leaves(events)[0].shape[0])
         blk = block if block else max(1, -(-mb // 3))
         race_events, closed_form = _raptor_race_budget(
-            blk, F, K, anyfail, fault_mode, direct, dep_t)
+            blk, F, K, anyfail, fault_mode, direct, graph.has_deps)
         job_body = _raptor_job_body(
             W=W, A=A, F=F, w_az=w_az, seq=seq, dep_mask=dep_mask,
             slat=slat, direct=direct, closed_form=closed_form,
             race_events=race_events, fault_mode=fault_mode,
             anyfail=anyfail, fail_prob=fail_prob, pol=pol, fp=fp,
             has_failseq=(fail_prob > 0.0 and not fault_mode), env=env,
-            trace=trace)
+            trace=trace, cond=cond)
         return blocked_event_replay(job_body, wf, events, block=blk,
                                     resolver=resolver, scan=scan,
                                     summary_backend=summary_backend)
@@ -883,7 +921,7 @@ def _raptor_stream_fns(W: int, A: int, F: int, K: int, seq_t: tuple,
 
 
 @functools.lru_cache(maxsize=None)
-def _stock_trial_fn(jobs: int, W: int, A: int, K: int, dep_t: tuple,
+def _stock_trial_fn(jobs: int, W: int, A: int, graph: WorkflowGraph,
                     dist: str, fail_prob: float,
                     faults: FaultProfile = None,
                     policy: RecoveryPolicy = None, passes: int = 1,
@@ -933,7 +971,8 @@ def _stock_trial_fn(jobs: int, W: int, A: int, K: int, dep_t: tuple,
     an attempt axis plus the per-attempt ``fail`` outcomes.  Both
     ``None`` (or disabled/default) compiles EXACTLY the pre-fault path.
     """
-    dep_rows = np.array(dep_t, dtype=bool)
+    K = graph.K
+    dep_rows = np.array(graph.dep_mask(), dtype=bool)
     has_deps = bool(dep_rows.any())
     root = ~dep_rows.any(axis=1)
     dep_mask = jnp.array(dep_rows)
@@ -1166,7 +1205,7 @@ def _stock_trial_fn(jobs: int, W: int, A: int, K: int, dep_t: tuple,
 
 
 @functools.lru_cache(maxsize=None)
-def _raptor_runner(jobs, W, A, F, K, seq_t, dep_t, dist, fail_prob,
+def _raptor_runner(jobs, W, A, F, graph, dist, fail_prob,
                    faults: FaultProfile = None,
                    policy: RecoveryPolicy = None,
                    block: int = 1, resolver: str = "fixpoint",
@@ -1177,21 +1216,21 @@ def _raptor_runner(jobs, W, A, F, K, seq_t, dep_t, dist, fail_prob,
     here: the device-sharded driver (:mod:`repro.sim.sweeps`) vmaps the
     same per-trial body over the config axis and shards it over the mesh.
     """
-    trial = _raptor_trial_fn(jobs, W, A, F, K, seq_t, dep_t, dist,
+    trial = _raptor_trial_fn(jobs, W, A, F, graph, dist,
                              fail_prob, faults, policy, block, resolver,
                              scan, summary_backend, trace)
     return jax.jit(jax.vmap(trial, in_axes=(0,) + (None,) * 9))
 
 
 @functools.lru_cache(maxsize=None)
-def _stock_runner(jobs, W, A, K, dep_t, dist, fail_prob,
+def _stock_runner(jobs, W, A, graph, dist, fail_prob,
                   faults: FaultProfile = None,
                   policy: RecoveryPolicy = None, passes: int = 1,
                   has_extras: bool = False, block: int = 1,
                   backend: str = "scan", resolver: str = "fixpoint",
                   scan: str = "seq",
                   summary_backend: str = "xla", trace: bool = False):
-    trial = _stock_trial_fn(jobs, W, A, K, dep_t, dist, fail_prob,
+    trial = _stock_trial_fn(jobs, W, A, graph, dist, fail_prob,
                             faults, policy, passes, has_extras, block,
                             backend, resolver, scan,
                             summary_backend, trace)
@@ -1332,22 +1371,15 @@ class QueueFlightSim:
         ha = self.A > 1
         self.oh_mu, self.oh_sigma = lognormal_params(
             *OverheadModel.TABLE[(ha, load)])
-        # static manifest prep (host-side numpy)
-        self._seq = _member_sequences(wl, self.flight)
-        self._dep = _dep_mask(wl.tasks, wl.deps)
-        s_tasks, s_means, s_deps = wl.stock_graph()
-        self._sdep = _dep_mask(s_tasks, s_deps)
-        self._stopo = _topo_order(self._sdep)
-        self._smeans = np.asarray(s_means, dtype=np.float32)
+        # static manifest prep: both engines' sequences/masks/levels now
+        # come straight off the compiled IR (repro.core.workflow) — the
+        # graph objects themselves are the cached builders' static keys
+        self._sgraph = wl.stock_graph()
+        self._smeans = np.asarray(self._sgraph.means, dtype=np.float32)
         self._sextras = np.asarray(wl.stock_extras(), dtype=np.float32)
         # fixed-point pass budget for the task-FCFS stock replay: depth+1
         # passes materialize every ready time, extras refine the estimates
-        depth = np.zeros(len(s_tasks), dtype=np.int64)
-        for t in self._stopo:
-            ds = np.where(self._sdep[t])[0]
-            if ds.size:
-                depth[t] = 1 + int(depth[ds].max())
-        self._sdepth = int(depth.max())
+        self._sdepth = self._sgraph.stage_depth()
         if self.fault_mode:
             # the retry/hedge readies materialize through the same
             # bounded fixed point as staged readies: each stage level
@@ -1378,17 +1410,14 @@ class QueueFlightSim:
     def _raptor_fn(self, jobs: int, trace: bool = False):
         blk, res, sc = self.engine_config("raptor")
         return _raptor_runner(
-            int(jobs), self.W, self.A, self.flight, len(self.wl.tasks),
-            tuple(map(tuple, self._seq.tolist())),
-            tuple(map(tuple, self._dep.tolist())),
+            int(jobs), self.W, self.A, self.flight, self.wl.graph,
             self.wl.dist, self.wl.fail_prob, self._fp, self._policy,
             blk, res, sc, self.summary_backend, trace)
 
     def _stock_fn(self, jobs: int, trace: bool = False):
         blk, res, sc = self.engine_config("stock")
         return _stock_runner(
-            int(jobs), self.W, self.A, len(self._smeans),
-            tuple(map(tuple, self._sdep.tolist())),
+            int(jobs), self.W, self.A, self._sgraph,
             self.wl.dist, self.wl.fail_prob, self._fp, self._policy,
             self._spasses, bool(self._sextras.any()), blk,
             self.booking_backend, res, sc, self.summary_backend, trace)

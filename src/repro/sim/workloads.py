@@ -1,12 +1,35 @@
-"""The paper's three evaluation workloads as service-time models (§4.2).
+"""The evaluation workload bank: declarative specs + service-time models.
+
+Every workload is ONE compiled :class:`repro.core.workflow.WorkflowGraph`
+(the manifest compiler's IR) consumed by all engines — the scalar oracle
+(`sim/flights.py`), the vectorized closed-loop engines
+(`sim/vector_queue.py`), and streaming/sweeps.  The graph factories here
+are that single source of truth; the per-engine workload wrappers
+(:class:`SimWorkload` here + ``QueueWorkload`` in `sim/vector_queue.py`)
+bind the same graphs to each engine's service-draw machinery.
 
 Calibration: constants are fit so the STOCK OpenWhisk path reproduces the
 "w/o Raptor" column of Table 7 on the HA 3-AZ cluster at moderate load; the
 Raptor path is then *prediction*, not fit — its match to the "w/ Raptor"
 column (and to 2*E[min]/E[max] = 2/3) is the reproduction result.
+
+Beyond the paper's three workloads, the bank seeds deeper graphs the
+hand-rolled manifests never exercised (EXPERIMENTS.md §manifests):
+
+* :func:`etl_graph` — a job -> stage -> task ETL pipeline: ingest, a
+  ``validate`` guard whose outcome routes poison jobs down a quarantine
+  branch (data-dependent :func:`repro.core.workflow.conditional`), a
+  wide parameterized transform fan-out, and a commit joining both arms;
+* :func:`mapreduce_graph` — ranked map fan-out, an explicit
+  :func:`repro.core.workflow.barrier` sync, a ranked reduce stage, and
+  a publish sink.
 """
 from __future__ import annotations
 
+from typing import Optional
+
+from repro.core.workflow import (WorkflowGraph, barrier, branch, chain,
+                                 compile_spec, conditional, fanout, task)
 from repro.sim.cluster import Cluster
 from repro.sim.faults import FaultProfile
 from repro.sim.flights import SimWorkload
@@ -38,13 +61,17 @@ KEYGEN_CV = 1.45
 KEYGEN_OFFSET_MS = 40.0
 
 
+def keygen_graph() -> WorkflowGraph:
+    return compile_spec(branch(task("keygen_a", KEYGEN_MEAN_MS),
+                               task("keygen_b", KEYGEN_MEAN_MS)),
+                        name="ssh-keygen")
+
+
 def keygen_workload(fail_prob: float = 0.0,
-                    faults: FaultProfile = None,
-                    recovery: RecoveryPolicy = None) -> SimWorkload:
+                    faults: Optional[FaultProfile] = None,
+                    recovery: Optional[RecoveryPolicy] = None) -> SimWorkload:
     return SimWorkload(
-        name="ssh-keygen",
-        tasks=["keygen_a", "keygen_b"],
-        deps={"keygen_a": (), "keygen_b": ()},
+        graph=keygen_graph(),
         concurrency=2,
         make_draws=lambda cl: cl.draws(KEYGEN_MEAN_MS, KEYGEN_OFFSET_MS,
                                        "lognorm", cv=KEYGEN_CV),
@@ -56,6 +83,20 @@ def keygen_workload(fail_prob: float = 0.0,
     )
 
 
+def _graph_draws(graph: WorkflowGraph, cl: Cluster, dist: str,
+                 cv: float = 1.0):
+    """Unit draws scaled by the graph's per-task mean bindings — the
+    scalar engines' view of the IR's service model."""
+    means = dict(zip(graph.tasks, graph.means))
+    base = cl.draws(1.0, 0.0, dist, cv=cv)
+    draw0 = base.draw
+
+    def draw(t, worker):
+        return draw0(t, worker) * means[t]
+    base.draw = draw
+    return base
+
+
 # ---- word count: serverless map-reduce (AWS-style ad-hoc pipeline) --------
 WC_SPLIT_MS = 300.0
 WC_MAP_MS = 700.0
@@ -63,29 +104,22 @@ WC_REDUCE_MS = 420.0
 WC_STORAGE_HOP_MS = 800.0      # S3/GCS round-trip on the stock control path
 
 
+def wordcount_graph() -> WorkflowGraph:
+    return compile_spec(chain(task("split", WC_SPLIT_MS),
+                              fanout(task("map", WC_MAP_MS), 4),
+                              task("reduce", WC_REDUCE_MS)),
+                        name="wordcount")
+
+
 def wordcount_workload(fail_prob: float = 0.0,
-                       faults: FaultProfile = None,
-                       recovery: RecoveryPolicy = None) -> SimWorkload:
-    means = {"split": WC_SPLIT_MS, "reduce": WC_REDUCE_MS}
-    means.update({f"map{i}": WC_MAP_MS for i in range(4)})
-
-    def make_draws(cl: Cluster):
-        base = cl.draws(1.0, 0.0, "exp")
-        draw0 = base.draw
-
-        def draw(task, worker):
-            return draw0(task, worker) * means[task]
-        base.draw = draw
-        return base
-
-    deps = {"split": (), "reduce": tuple(f"map{i}" for i in range(4))}
-    deps.update({f"map{i}": ("split",) for i in range(4)})
+                       faults: Optional[FaultProfile] = None,
+                       recovery: Optional[RecoveryPolicy] = None
+                       ) -> SimWorkload:
+    g = wordcount_graph()
     return SimWorkload(
-        name="wordcount",
-        tasks=["split", "map0", "map1", "map2", "map3", "reduce"],
-        deps=deps,
+        graph=g,
         concurrency=2,
-        make_draws=make_draws,
+        make_draws=lambda cl: _graph_draws(g, cl, "exp"),
         stock_stage_overhead=WC_STORAGE_HOP_MS,
         fail_prob=fail_prob,
         work_est_ws=4.2,
@@ -107,32 +141,41 @@ THUMB_RESIZE_MS = 800.0
 THUMB_CV = 0.22
 
 
+def thumbnail_graph() -> WorkflowGraph:
+    return compile_spec(chain(task("download", THUMB_DOWNLOAD_MS),
+                              fanout(task("thumb", THUMB_RESIZE_MS), 4)),
+                        name="thumbnail")
+
+
+def thumbnail_stock_graph() -> WorkflowGraph:
+    """Stock functions are self-contained: four dep-free resize tasks
+    (each pays the re-download as a second service component)."""
+    return compile_spec(fanout(task("thumb", THUMB_RESIZE_MS), 4),
+                        name="thumbnail")
+
+
 def thumbnail_workload(fail_prob: float = 0.0,
-                       faults: FaultProfile = None,
-                       recovery: RecoveryPolicy = None) -> SimWorkload:
-    means = {"download": THUMB_DOWNLOAD_MS}
-    means.update({f"thumb{i}": THUMB_RESIZE_MS for i in range(4)})
+                       faults: Optional[FaultProfile] = None,
+                       recovery: Optional[RecoveryPolicy] = None
+                       ) -> SimWorkload:
+    g = thumbnail_graph()
+    means = dict(zip(g.tasks, g.means))
 
     def make_draws(cl: Cluster):
         base = cl.draws(1.0, 0.0, "lognorm", cv=THUMB_CV)
         draw0 = base.draw
 
-        def draw(task, worker):
-            t = draw0(task, worker) * means[task]
-            if task.startswith("thumb") and not getattr(base, "raptor", False):
+        def draw(t, worker):
+            svc = draw0(t, worker) * means[t]
+            if t.startswith("thumb") and not getattr(base, "raptor", False):
                 # stock path: self-contained function re-downloads source
-                t += draw0(task + "_dl", worker) * THUMB_DOWNLOAD_MS
-            return t
+                svc += draw0(t + "_dl", worker) * THUMB_DOWNLOAD_MS
+            return svc
         base.draw = draw
         return base
 
-    deps = {"download": ()}
-    deps.update({f"thumb{i}": ("download",) for i in range(4)})
-    thumbs = [f"thumb{i}" for i in range(4)]
     return SimWorkload(
-        name="thumbnail",
-        tasks=["download"] + thumbs,
-        deps=deps,
+        graph=g,
         concurrency=4,
         make_draws=make_draws,
         stock_stage_overhead=0.0,
@@ -140,8 +183,7 @@ def thumbnail_workload(fail_prob: float = 0.0,
         work_est_ws=5.6,
         faults=faults,
         recovery=recovery,
-        stock_tasks=thumbs,                 # stock fns are self-contained
-        stock_deps={t: () for t in thumbs},
+        stock=thumbnail_stock_graph(),      # stock fns are self-contained
     )
 
 
@@ -150,19 +192,113 @@ RELIABILITY_MEAN_MS = 100.0
 RELIABILITY_CV = 0.05
 
 
+def reliability_graph(n_tasks: int) -> WorkflowGraph:
+    return compile_spec(fanout(task("busy", RELIABILITY_MEAN_MS), n_tasks),
+                        name=f"busy{n_tasks}")
+
+
 def reliability_workload(n_tasks: int, fail_prob: float,
-                         faults: FaultProfile = None,
-                         recovery: RecoveryPolicy = None) -> SimWorkload:
-    tasks = [f"busy{i}" for i in range(n_tasks)]
+                         faults: Optional[FaultProfile] = None,
+                         recovery: Optional[RecoveryPolicy] = None
+                         ) -> SimWorkload:
     return SimWorkload(
-        name=f"busy{n_tasks}",
-        tasks=tasks,
-        deps={t: () for t in tasks},
+        graph=reliability_graph(n_tasks),
         concurrency=n_tasks,
         make_draws=lambda cl: cl.draws(RELIABILITY_MEAN_MS, 0.0, "lognorm",
                                        cv=RELIABILITY_CV),
         fail_prob=fail_prob,
         work_est_ws=0.1 * n_tasks * 2,
+        faults=faults,
+        recovery=recovery,
+    )
+
+
+# ---- workload bank: deeper graphs through the manifest compiler -----------
+# ETL pipeline (job -> stage -> task): ingest, a validation guard whose
+# OUTCOME routes the job — clean jobs fan out over `rank` transforms and
+# load, poison jobs detour to quarantine — and a commit that joins both
+# arms.  `fail_prob` doubles as the poison rate: the guard's deciding
+# attempt fails with that probability and the conditional selects the
+# quarantine branch (plus ordinary per-task error/retry dynamics on the
+# rest of the graph).
+ETL_INGEST_MS = 220.0
+ETL_VALIDATE_MS = 140.0
+ETL_XFORM_MS = 420.0
+ETL_LOAD_MS = 260.0
+ETL_QUARANTINE_MS = 300.0
+ETL_COMMIT_MS = 180.0
+
+
+def etl_graph(rank: int = 6) -> WorkflowGraph:
+    spec = chain(
+        task("ingest", ETL_INGEST_MS),
+        conditional(
+            task("validate", ETL_VALIDATE_MS),
+            then=chain(fanout(task("xform", ETL_XFORM_MS), rank),
+                       task("load", ETL_LOAD_MS)),
+            orelse=task("quarantine", ETL_QUARANTINE_MS)),
+        task("commit", ETL_COMMIT_MS))
+    return compile_spec(spec, name=f"etl{rank}")
+
+
+def _etl_work_ws(rank: int) -> float:
+    happy = (ETL_INGEST_MS + ETL_VALIDATE_MS + rank * ETL_XFORM_MS
+             + ETL_LOAD_MS + ETL_COMMIT_MS)
+    return happy / 1000.0
+
+
+def etl_workload(rank: int = 6, fail_prob: float = 0.08,
+                 faults: Optional[FaultProfile] = None,
+                 recovery: Optional[RecoveryPolicy] = None) -> SimWorkload:
+    g = etl_graph(rank)
+    return SimWorkload(
+        graph=g,
+        concurrency=3,
+        make_draws=lambda cl: _graph_draws(g, cl, "exp"),
+        stock_stage_overhead=WC_STORAGE_HOP_MS,
+        fail_prob=fail_prob,
+        work_est_ws=_etl_work_ws(rank),
+        faults=faults,
+        recovery=recovery,
+    )
+
+
+# Ranked map-reduce with a sync barrier: scatter -> rank maps -> BARRIER ->
+# `reducers` reduces (each joined on every map by the barrier) -> publish.
+MR_SCATTER_MS = 250.0
+MR_MAP_MS = 600.0
+MR_REDUCE_MS = 480.0
+MR_PUBLISH_MS = 150.0
+
+
+def mapreduce_graph(rank: int = 4, reducers: int = 2) -> WorkflowGraph:
+    spec = chain(
+        task("scatter", MR_SCATTER_MS),
+        fanout(task("map", MR_MAP_MS), rank),
+        barrier(),
+        fanout(task("reduce", MR_REDUCE_MS), reducers),
+        task("publish", MR_PUBLISH_MS))
+    return compile_spec(spec, name=f"mapreduce{rank}x{reducers}")
+
+
+def _mapreduce_work_ws(rank: int, reducers: int) -> float:
+    return (MR_SCATTER_MS + rank * MR_MAP_MS + reducers * MR_REDUCE_MS
+            + MR_PUBLISH_MS) / 1000.0
+
+
+def mapreduce_workload(rank: int = 4, reducers: int = 2,
+                       fail_prob: float = 0.0,
+                       faults: Optional[FaultProfile] = None,
+                       recovery: Optional[RecoveryPolicy] = None
+                       ) -> SimWorkload:
+    g = mapreduce_graph(rank, reducers)
+    return SimWorkload(
+        graph=g,
+        concurrency=3,
+        make_draws=lambda cl: _graph_draws(g, cl, "exp"),
+        stock_stage_overhead=WC_STORAGE_HOP_MS,
+        fail_prob=fail_prob,
+        work_est_ws=_mapreduce_work_ws(rank, reducers),
         faults=faults,
         recovery=recovery,
     )

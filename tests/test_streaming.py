@@ -101,9 +101,7 @@ def test_padded_tail_leaves_wstate_untouched():
     events = eng.concatenated_events()
     truncated = jax.tree_util.tree_map(lambda x: x[:6], events)
     _, _, step = _raptor_stream_fns(
-        sim.W, sim.A, sim.flight, len(sim.wl.tasks),
-        tuple(map(tuple, sim._seq.tolist())),
-        tuple(map(tuple, sim._dep.tolist())),
+        sim.W, sim.A, sim.flight, sim.wl.graph,
         sim.wl.dist, sim.wl.fail_prob, sim._fp, sim._policy,
         1, "fixpoint", "seq", sim.summary_backend, False)
     wf_live, _ = step(jnp.zeros(sim.W), truncated, eng.env, sim.slat)

@@ -1,0 +1,467 @@
+"""Workflow-manifest compiler: spec combinators, one IR, every engine.
+
+Three tiers:
+
+* **compiler units + golden IR snapshots** — the combinators compile
+  wordcount/thumbnail to literal-tuple IR identical to the hand-rolled
+  encodings they replaced (representation identity), cycles die at
+  construction naming the cycle, nested conditionals are rejected;
+* **replay identity** — a pure-numpy reference replay of the flight
+  race (same event order, same float32 arithmetic) pins
+  ``dag_flight_trial`` bitwise on random compiled DAGs, including
+  ``fail_prob > 0`` and conditional mask-select branches.  When
+  ``hypothesis`` is installed the same checker runs under ``@given``;
+  the seeded sweep below runs regardless;
+* **engine agreement** — the workload-bank graphs (ETL with the
+  poison-job conditional, ranked map-reduce with a barrier) replay
+  through scalar, vector, and streaming engines and agree.
+
+Seed convention: every test draws from explicit integer seeds.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.dag import kahn_order, validate_acyclic
+from repro.core.manifest import ActionManifest, FunctionSpec
+from repro.core.workflow import (WorkflowGraph, barrier, branch, chain,
+                                 compile_spec, conditional, fanout, task)
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+except ModuleNotFoundError:
+    from _hypothesis_compat import hypothesis, st
+
+
+# ------------------------------------------------------------------
+# cycle detection (satellite): construction-time, naming the cycle
+# ------------------------------------------------------------------
+
+def test_manifest_cycle_detected_at_construction():
+    with pytest.raises(ValueError, match=r"dependency cycle: .*a.*b.*a"):
+        ActionManifest((FunctionSpec("a", None, ("b",)),
+                        FunctionSpec("b", None, ("a",))))
+
+
+def test_manifest_self_cycle_named():
+    with pytest.raises(ValueError, match=r"dependency cycle: x -> x"):
+        ActionManifest((FunctionSpec("x", None, ("x",)),))
+
+
+def test_workflow_graph_cycle_named():
+    with pytest.raises(ValueError, match="dependency cycle"):
+        WorkflowGraph(name="bad", tasks=("a", "b", "c"),
+                      means=(1.0, 1.0, 1.0),
+                      deps=(("c",), ("a",), ("b",)))
+
+
+def test_kahn_order_matches_declaration_preference():
+    order = kahn_order({"s": (), "m1": ("s",), "m0": ("s",),
+                        "r": ("m0", "m1")})
+    assert order == ["s", "m1", "m0", "r"]
+    man = ActionManifest((FunctionSpec("a", None, ()),
+                          FunctionSpec("b", None, ("a",))))
+    assert validate_acyclic(man) == ["a", "b"]
+
+
+def test_manifest_spec_index():
+    man = ActionManifest((FunctionSpec("a", None, ()),
+                          FunctionSpec("b", None, ("a",))))
+    assert man.spec("b").dependencies == ("a",)
+    with pytest.raises(KeyError):
+        man.spec("nope")
+
+
+# ------------------------------------------------------------------
+# combinator units
+# ------------------------------------------------------------------
+
+def test_fanout_suffixes_lane_names():
+    g = compile_spec(fanout(task("map", 700.0), 4), name="m")
+    assert g.tasks == ("map0", "map1", "map2", "map3")
+    assert g.deps == ((), (), (), ())
+
+
+def test_chain_links_lanewise_on_matching_rank():
+    g = compile_spec(chain(fanout(task("a"), 3), fanout(task("b"), 3)),
+                     name="lanes")
+    assert g.dep_map() == {"a0": (), "a1": (), "a2": (),
+                           "b0": ("a0",), "b1": ("a1",), "b2": ("a2",)}
+
+
+def test_barrier_forces_all_to_all_join():
+    g = compile_spec(chain(fanout(task("a"), 3), barrier(),
+                           fanout(task("b"), 3)), name="sync")
+    assert g.deps[g.index["b1"]] == ("a0", "a1", "a2")
+    assert g.stage_depth() == 1
+
+
+def test_branch_keeps_parts_independent():
+    g = compile_spec(branch(task("x"), task("y")), name="br")
+    assert g.deps == ((), ())
+    assert g.levels() == ((0, 1),)
+
+
+def test_chain_mismatched_ranks_fan_in():
+    g = compile_spec(chain(fanout(task("m"), 4), task("r")), name="fi")
+    assert g.deps[g.index["r"]] == ("m0", "m1", "m2", "m3")
+
+
+def test_conditional_compiles_select_masks():
+    g = compile_spec(
+        chain(conditional(task("v"), then=task("go"), orelse=task("no")),
+              task("fin")), name="cond")
+    v, go, no, fin = (g.index[t] for t in ("v", "go", "no", "fin"))
+    assert g.cond_guard[go] == v and g.cond_sense[go] is True
+    assert g.cond_guard[no] == v and g.cond_sense[no] is False
+    assert g.cond_guard[v] == -1 and g.cond_guard[fin] == -1
+    assert set(g.deps[go]) == {"v"} and set(g.deps[no]) == {"v"}
+    assert set(g.deps[fin]) == {"go", "no"}
+    assert g.has_conditionals and g.cond_static is not None
+    flat = g.flatten()
+    assert not flat.has_conditionals and flat.deps == g.deps
+
+
+def test_nested_conditional_rejected():
+    inner = conditional(task("g2"), then=task("t2"))
+    with pytest.raises(ValueError, match="nested conditional"):
+        compile_spec(conditional(task("g1"), then=inner), name="nest")
+
+
+def test_barrier_cannot_open_or_close_chain():
+    with pytest.raises(ValueError, match="barrier cannot open"):
+        compile_spec(chain(barrier(), task("a")), name="b0")
+    with pytest.raises(ValueError, match="barrier cannot close"):
+        compile_spec(chain(task("a"), barrier()), name="b1")
+
+
+def test_duplicate_task_names_rejected():
+    with pytest.raises(ValueError, match="duplicate task names"):
+        compile_spec(chain(task("a"), task("a")), name="dup")
+
+
+def test_graph_is_hashable_static_key():
+    g1 = compile_spec(chain(task("a", 1.0), task("b", 2.0)), name="g")
+    g2 = compile_spec(chain(task("a", 1.0), task("b", 2.0)), name="g")
+    assert g1 == g2 and hash(g1) == hash(g2)
+    assert g1.manifest_hash == g2.manifest_hash
+    g3 = compile_spec(chain(task("a", 1.0), task("b", 3.0)), name="g")
+    assert g3.manifest_hash != g1.manifest_hash
+
+
+# ------------------------------------------------------------------
+# golden compiled-IR snapshots: representation identity with the
+# hand-rolled encodings the compiler replaced
+# ------------------------------------------------------------------
+
+def test_wordcount_ir_golden():
+    from repro.sim.workloads import wordcount_graph
+    g = wordcount_graph()
+    assert g.name == "wordcount"
+    assert g.tasks == ("split", "map0", "map1", "map2", "map3", "reduce")
+    assert g.means == (300.0, 700.0, 700.0, 700.0, 700.0, 420.0)
+    assert g.deps == ((),) + (("split",),) * 4 + (
+        ("map0", "map1", "map2", "map3"),)
+    assert g.cond_guard == (-1,) * 6
+    assert g.levels() == ((0,), (1, 2, 3, 4), (5,))
+    assert g.member_sequences(2).tolist() == [[0, 1, 2, 3, 4, 5],
+                                              [0, 2, 3, 4, 1, 5]]
+
+
+def test_thumbnail_ir_golden():
+    from repro.sim.workloads import thumbnail_graph, thumbnail_stock_graph
+    g = thumbnail_graph()
+    assert g.tasks == ("download", "thumb0", "thumb1", "thumb2", "thumb3")
+    assert g.means == (480.0, 800.0, 800.0, 800.0, 800.0)
+    assert g.deps == ((),) + (("download",),) * 4
+    s = thumbnail_stock_graph()
+    assert s.name == "thumbnail"
+    assert s.tasks == ("thumb0", "thumb1", "thumb2", "thumb3")
+    assert s.deps == ((),) * 4
+
+
+def test_bank_graphs_compile_shapes():
+    from repro.sim.workloads import etl_graph, mapreduce_graph
+    g = etl_graph(6)
+    assert g.tasks == ("ingest", "validate", "xform0", "xform1", "xform2",
+                       "xform3", "xform4", "xform5", "load", "quarantine",
+                       "commit")
+    v = g.index["validate"]
+    assert all(g.cond_guard[g.index[f"xform{i}"]] == v for i in range(6))
+    assert g.cond_sense[g.index["load"]] is True
+    assert g.cond_sense[g.index["quarantine"]] is False
+    assert set(g.deps[g.index["commit"]]) == {"load", "quarantine"}
+    m = mapreduce_graph(4, 2)
+    assert m.deps[m.index["reduce0"]] == ("map0", "map1", "map2", "map3")
+    assert m.deps[m.index["reduce1"]] == ("map0", "map1", "map2", "map3")
+    assert m.stage_depth() == 3
+
+
+# ------------------------------------------------------------------
+# replay identity: numpy reference oracle vs dag_flight_trial
+# ------------------------------------------------------------------
+
+def _reference_replay(z_seq, fail_seq, t_join, seq, dep_mask, slat,
+                      cond=None):
+    """Pure-numpy replay of ``dag_flight_trial``'s event scan — one event
+    at a time, same tie-breaks (first argmin/argmax), same float32
+    arithmetic — the semantics oracle the compiled masks must hit
+    bitwise."""
+    f32 = np.float32
+    F, K = z_seq.shape
+    z = np.asarray(z_seq, dtype=f32)
+    slat = f32(slat)
+    has_cond = cond is not None and any(g >= 0 for g in cond[0])
+    if has_cond:
+        gated = np.array([g >= 0 for g in cond[0]])
+        guard = np.array([g if g >= 0 else 0 for g in cond[0]])
+        sense = np.array(list(cond[1]))
+        gset = {g for g in cond[0] if g >= 0}
+        is_guard = np.array([k in gset for k in range(K)])
+    done = np.zeros(K, bool)
+    attempted = np.zeros((F, K), bool)
+    outcome = np.zeros(K, bool)
+    cur = np.full(F, -1)
+    curfail = np.zeros(F, bool)
+    fin = np.asarray(t_join, dtype=f32).copy()
+    released = np.zeros(F, bool)
+    trel = np.zeros(F, f32)
+    finished = False
+    ok = False
+    t_resp = f32(np.inf)
+    for _ in range(F * (K + 1)):
+        t = fin.min()
+        e = int(fin.argmin())
+        any_busy = not np.isinf(t)
+        tk = int(cur[e])
+        raw_ok = not curfail[e]
+        succ = any_busy and tk >= 0 and raw_ok
+        if has_cond:
+            if any_busy and tk >= 0 and is_guard[tk]:
+                succ = True
+            if succ:
+                outcome[tk] = raw_ok
+        done2 = done.copy()
+        if succ:
+            done2[tk] = True
+        if has_cond:
+            done2 |= gated & done2[guard] & (outcome[guard] != sense)
+        busy = ~np.isinf(fin)
+        freed = np.zeros(F, bool)
+        if succ:
+            freed = (cur == tk) & busy
+        if any_busy:
+            freed[e] = True
+        busy_after = busy & ~freed
+        idle = ~busy_after & ~released
+        cand = (~done2[seq]) & ~attempted
+        has_next = cand.any(axis=1)
+        j = np.argmax(cand, axis=1)
+        nxt = seq[np.arange(F), j]
+        z_next = z[np.arange(F), j]
+        f_next = fail_seq[np.arange(F), j]
+        can_start = idle & has_next
+        for m in range(F):
+            if can_start[m] and (dep_mask[nxt[m]] & ~done2).any():
+                can_start[m] = False
+        start = np.where(np.arange(F) == e, t, f32(t + slat)).astype(f32)
+        fin_try = (start + z_next).astype(f32)
+        fin = np.where(can_start, fin_try,
+                       np.where(busy_after, fin, f32(np.inf))).astype(f32)
+        cur = np.where(can_start, nxt, np.where(busy_after, cur, -1))
+        curfail = np.where(can_start, f_next,
+                           np.where(busy_after, curfail, False))
+        for m in range(F):
+            if can_start[m]:
+                attempted[m, j[m]] = True
+        newly_rel = idle & ~has_next
+        released = released | newly_rel
+        trel = np.where(newly_rel, t, trel).astype(f32)
+        complete = bool(done2.all())
+        no_busy = bool(np.isinf(fin).all())
+        terminal = (complete or no_busy) and not finished
+        if terminal:
+            trel = np.where(~released, t, trel).astype(f32)
+            released[:] = True
+            ok = complete
+            t_resp = t
+            finished = True
+        done = done2
+    return t_resp, ok, trel
+
+
+def _random_spec(rng, tag):
+    """One random spec assembled from every combinator, acyclic by
+    construction; names are unique via ``tag``."""
+    n = [0]
+
+    def fresh():
+        n[0] += 1
+        return f"{tag}t{n[0]}"
+
+    parts = []
+    for i in range(rng.integers(1, 4)):
+        kind = rng.integers(0, 4)
+        if kind == 0:
+            parts.append(task(fresh()))
+        elif kind == 1:
+            parts.append(fanout(task(fresh()), int(rng.integers(2, 4))))
+        elif kind == 2:
+            parts.append(branch(task(fresh()), task(fresh())))
+        else:
+            orelse = task(fresh()) if rng.integers(0, 2) else None
+            parts.append(conditional(task(fresh()),
+                                     then=task(fresh()), orelse=orelse))
+        if rng.integers(0, 3) == 0 and len(parts) > 0 and i < 2:
+            parts.append(barrier())
+    if isinstance(parts[-1], type(barrier())):
+        parts.append(task(fresh()))
+    return chain(*parts)
+
+
+def _check_replay_identity(seed):
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+    from repro.sim.vector_queue import dag_flight_trial
+    rng = np.random.default_rng(seed)
+    g = compile_spec(_random_spec(rng, f"s{seed}"), name=f"rand{seed}")
+    F = int(rng.integers(2, 5))
+    K = g.K
+    seq = g.member_sequences(F)
+    dep = g.dep_mask()
+    z = rng.uniform(100.0, 1000.0, (F, K)).astype(np.float32)
+    p_fail = float(rng.choice([0.0, 0.3]))
+    fail = rng.uniform(size=(F, K)) < p_fail
+    t_join = np.sort(rng.uniform(0.0, 50.0, F)).astype(np.float32)
+    slat = 0.5
+    want = _reference_replay(z, fail, t_join, seq, dep, slat,
+                             cond=g.cond_static)
+    got = dag_flight_trial(jnp.asarray(z), jnp.asarray(fail),
+                           jnp.asarray(t_join), jnp.asarray(seq),
+                           jnp.asarray(dep), slat, cond=g.cond_static)
+    np.testing.assert_array_equal(np.asarray(got[0]), want[0],
+                                  err_msg=f"t_resp seed={seed}")
+    assert bool(got[1]) == want[1], f"ok seed={seed}"
+    np.testing.assert_array_equal(np.asarray(got[2]), want[2],
+                                  err_msg=f"trel seed={seed}")
+
+
+@pytest.mark.parametrize("seed", range(16))
+def test_random_dag_replay_matches_reference(seed):
+    """Compiled masks of a random spec replay bitwise-equal to the
+    scalar reference oracle — failures and conditional branches
+    included (p_fail alternates 0.0/0.3 by seed draw)."""
+    _check_replay_identity(seed)
+
+
+@hypothesis.given(st.integers(min_value=1000, max_value=100000))
+@hypothesis.settings(max_examples=15, deadline=None)
+def test_random_dag_replay_matches_reference_hypothesis(seed):
+    _check_replay_identity(seed)
+
+
+def test_conditional_routes_guard_failure_to_orelse():
+    """Deterministic conditional unit: guard failure cancels the then-arm
+    (its tasks never run) and completes through orelse; guard success
+    cancels orelse.  Guard failure is routing, not job failure."""
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+    from repro.sim.vector_queue import dag_flight_trial
+    g = compile_spec(
+        chain(conditional(task("v"), then=task("go"), orelse=task("no")),
+              task("fin")), name="unit")
+    F = 2
+    seq = g.member_sequences(F)
+    dep = g.dep_mask()
+    z = np.full((F, g.K), 100.0, dtype=np.float32)
+    t_join = np.zeros(F, dtype=np.float32)
+    v = g.index["v"]
+    for guard_fails in (False, True):
+        fail = np.zeros((F, g.K), dtype=bool)
+        if guard_fails:
+            # fail every member's attempt at the guard (seq-ordered slots)
+            for m in range(F):
+                fail[m, np.where(seq[m] == v)[0][0]] = True
+        t_resp, ok, _ = dag_flight_trial(
+            jnp.asarray(z), jnp.asarray(fail), jnp.asarray(t_join),
+            jnp.asarray(seq), jnp.asarray(dep), 0.5, cond=g.cond_static)
+        assert bool(ok), f"guard_fails={guard_fails}: flight must complete"
+        # exactly 3 tasks run serially (v -> arm -> fin); the cancelled
+        # arm contributes no service time
+        assert 300.0 <= float(t_resp) < 302.0, (guard_fails,
+                                                float(t_resp))
+
+
+# ------------------------------------------------------------------
+# workload bank through the engines (agreement + streaming identity)
+# ------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["etl", "mapreduce"])
+def test_bank_scalar_vector_agreement(name):
+    """The two new workload-bank graphs replay end-to-end through BOTH
+    closed-loop engines and agree — raptor (conditional mask-select live)
+    and stock (flattened: both arms run, which is why ETL's stock fail
+    rate is large at fail_prob=0.08).  Success-conditioned means, per
+    ``QueueResult.summary``."""
+    jax = pytest.importorskip("jax")
+    from repro.sim.cluster import Cluster
+    from repro.sim.experiments import HA, rate_for
+    from repro.sim.flights import FlightSim
+    from repro.sim.vector_queue import (QueueFlightSim, etl_queue,
+                                        mapreduce_queue)
+    from repro.sim.workloads import etl_workload, mapreduce_workload
+    qwl, swl_fn = ((etl_queue(), etl_workload) if name == "etl"
+                   else (mapreduce_queue(), mapreduce_workload))
+    vec = QueueFlightSim(qwl, load="medium", seed=0, **HA)
+    for raptor in (True, False):
+        wl = swl_fn()
+        sim = FlightSim(Cluster(seed=7, **HA), wl, raptor=raptor,
+                        arrival_rate_hz=rate_for(wl, HA, "medium"),
+                        duration_s=1200.0, load="medium", seed=7)
+        jobs = sim.run()
+        s_mean = float(np.mean([j.response for j in jobs if j.ok]))
+        s_fail = float(np.mean([not j.ok for j in jobs]))
+        v = vec.run(768, 8, raptor=raptor).summary()
+        assert v["mean"] == pytest.approx(s_mean, rel=0.10), (
+            f"{name} raptor={raptor}: scalar {s_mean:.0f}ms "
+            f"vs vector {v['mean']:.0f}ms")
+        assert v["fail_rate"] == pytest.approx(s_fail, abs=0.04)
+
+
+def test_bank_streaming_oracle_identity():
+    jax = pytest.importorskip("jax")
+    from repro.sim.experiments import HA
+    from repro.sim.streaming import oracle_check
+    from repro.sim.vector_queue import QueueFlightSim, etl_queue
+    sim = QueueFlightSim(etl_queue(), load="medium", seed=3, block=1, **HA)
+    res = oracle_check(sim, n_steps=3, microbatch=16)
+    assert res["bitwise"], res
+
+
+def test_bank_blocked_configs_bitwise_on_conditional():
+    """The conditional mask-select path stays block/resolver invariant:
+    blocked replay == block=1 oracle bitwise on the ETL graph."""
+    jax = pytest.importorskip("jax")
+    from repro.sim.vector_queue import QueueFlightSim, etl_queue
+    kw = dict(num_workers=8, num_azs=2, seed=5)
+    a = QueueFlightSim(etl_queue(), block=1, **kw).run(96, 2)
+    b = QueueFlightSim(etl_queue(), block=8, resolver="unrolled",
+                       **kw).run(96, 2)
+    np.testing.assert_array_equal(np.asarray(a.response_ms),
+                                  np.asarray(b.response_ms))
+    np.testing.assert_array_equal(np.asarray(a.ok), np.asarray(b.ok))
+
+
+def test_queue_workload_graph_is_bucket_key():
+    """Content-equal compiled graphs hit the same lru cache entry; the
+    bucket/bench identity is the graph itself (plus its manifest hash)."""
+    jax = pytest.importorskip("jax")
+    from repro.sim.vector_queue import _raptor_trial_fn, etl_queue
+    q1, q2 = etl_queue(), etl_queue()
+    assert q1.graph == q2.graph
+    f1 = _raptor_trial_fn(64, 8, 2, 3, q1.graph, "exp", 0.08)
+    f2 = _raptor_trial_fn(64, 8, 2, 3, q2.graph, "exp", 0.08)
+    assert f1 is f2
+    assert q1.graph.manifest_hash == q2.graph.manifest_hash
